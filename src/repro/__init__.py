@@ -1,0 +1,2 @@
+"""repro — Spindle (RDMA atomic multicast optimizations) as a multi-pod
+JAX training/serving framework.  See README.md and DESIGN.md."""

@@ -1,0 +1,18 @@
+"""Assigned architecture configs (public literature, exact hyperparams).
+
+Importing this package registers every architecture with
+:mod:`repro.models.registry`.  One module per architecture, plus
+``spindle_smc`` — the paper's own multicast system configuration used by
+the benchmark harness.
+"""
+
+from repro.configs import (deepseek_moe_16b, internvl2_26b, mamba2_2_7b,
+                           qwen1_5_0_5b, qwen2_1_5b, qwen2_72b,
+                           qwen2_moe_a2_7b, qwen3_1_7b, seamless_m4t_medium,
+                           spindle_smc, zamba2_2_7b)
+
+__all__ = [
+    "internvl2_26b", "qwen2_moe_a2_7b", "deepseek_moe_16b", "qwen3_1_7b",
+    "qwen2_1_5b", "qwen1_5_0_5b", "qwen2_72b", "seamless_m4t_medium",
+    "zamba2_2_7b", "mamba2_2_7b", "spindle_smc",
+]

@@ -1,0 +1,25 @@
+"""seamless-m4t-medium [audio] — enc-dec, 12L+12L d_model=1024 16H (kv=16)
+d_ff=4096 vocab=256206.  [arXiv:2308.11596; hf]
+
+The audio frontend is a STUB: the encoder consumes precomputed frame
+embeddings (B, S_src, d_model).  Deviations noted in DESIGN.md: RoPE +
+RMSNorm instead of sinusoidal + LayerNorm.
+"""
+
+from repro.configs._common import FULL_ATTN_SKIP
+from repro.models import registry
+from repro.models.config import EncDecConfig, ModelConfig
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-medium", family="encdec",
+        n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+        d_ff=4096, vocab_size=256206, head_dim=64,
+        rope_theta=1e4,
+        encdec=EncDecConfig(n_encoder_layers=12, n_decoder_layers=12),
+        skip_shapes=FULL_ATTN_SKIP,
+    )
+
+
+registry.register("seamless-m4t-medium", build)

@@ -1,0 +1,21 @@
+"""repro.core — Spindle: atomic-multicast optimizations (Jha, Rosa, Birman
+2021) reproduced as composable JAX modules plus a calibrated protocol DES.
+
+Layout:
+  costmodel  — RDMA (paper testbed) + TPU v5e hardware constants
+  sst        — monotonic shared state table (Sec. 2.2) + shard_map push
+  smc        — ring-buffer small-message multicast (Sec. 2.3)
+  nullsend   — the null-send rule and its batched form (Sec. 3.3)
+  delivery   — round-robin total-order delivery predicates (Secs. 2.4/3.2)
+  sweep      — the fused predicate sweep as a pure-JAX protocol round
+  simulator  — discrete-event reproduction of the paper's evaluation
+  gradsync   — the techniques applied to gradient synchronization
+  dds        — OMG-DDS pub/sub layer with the paper's four QoS levels
+  views      — virtual-synchrony membership for the elastic runtime
+"""
+
+from repro.core import (costmodel, dds, delivery, gradsync, nullsend, smc,
+                        simulator, sst, sweep, views)
+
+__all__ = ["costmodel", "dds", "delivery", "gradsync", "nullsend", "smc",
+           "simulator", "sst", "sweep", "views"]

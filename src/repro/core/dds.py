@@ -1,0 +1,134 @@
+"""An OMG-DDS-style publish/subscribe layer over the Spindle multicast
+(paper Sec. 4.6).
+
+The DDS maps DCPS onto the underlying group-communication system by forming
+one top-level domain containing every participant, then one subgroup per
+*topic* whose members are exactly the processes that publish or subscribe
+to it.  Publishers construct samples **in place** in SMC slots (Sec. 3.1)
+and mark them ready; delivery upcalls hand subscribers pointers (or copies,
+per QoS).
+
+Four QoS levels (Sec. 4.6):
+
+  * UNORDERED        — delivered without waiting for stability; discarded
+                       after the upcall.
+  * ATOMIC_MULTICAST — Derecho atomic multicast; discarded after upcall.
+  * VOLATILE         — additionally copied into subscriber memory (late
+                       joiners can catch up).
+  * LOGGED           — additionally appended to an SSD log.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import simulator as sim
+
+
+class QoS(enum.Enum):
+    UNORDERED = "unordered"
+    ATOMIC_MULTICAST = "atomic"
+    VOLATILE = "volatile"
+    LOGGED = "logged"
+
+
+def qos_flags(qos: QoS, base: Optional[sim.SpindleFlags] = None,
+              ) -> sim.SpindleFlags:
+    """Translate a QoS level into protocol flags layered on `base`."""
+    base = base if base is not None else sim.SpindleFlags.spindle()
+    if qos is QoS.UNORDERED:
+        return dataclasses.replace(base, wait_stability=False)
+    if qos is QoS.ATOMIC_MULTICAST:
+        return base
+    if qos is QoS.VOLATILE:
+        return dataclasses.replace(base, memcpy_delivery=True)
+    if qos is QoS.LOGGED:
+        return dataclasses.replace(base, memcpy_delivery=True,
+                                   disk_append=True)
+    raise ValueError(qos)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topic:
+    """One DDS topic == one subgroup of its publishers + subscribers."""
+
+    name: str
+    topic_id: int                       # 8-bit topic number per OMG DDS
+    publishers: Tuple[int, ...]         # node ids
+    subscribers: Tuple[int, ...]
+    sample_size: int = 10240
+    qos: QoS = QoS.ATOMIC_MULTICAST
+    window: int = 100
+
+    def __post_init__(self):
+        if not 0 <= self.topic_id < 256:
+            raise ValueError("OMG DDS topic numbers are 8-bit")
+
+    @property
+    def members(self) -> Tuple[int, ...]:
+        return tuple(sorted(set(self.publishers) | set(self.subscribers)))
+
+
+@dataclasses.dataclass
+class Domain:
+    """A DDS domain: the top-level group plus its topics."""
+
+    n_nodes: int
+    topics: List[Topic] = dataclasses.field(default_factory=list)
+
+    def create_topic(self, name: str, publishers: Sequence[int],
+                     subscribers: Sequence[int], *, sample_size: int = 10240,
+                     qos: QoS = QoS.ATOMIC_MULTICAST,
+                     window: int = 100) -> Topic:
+        if len(self.topics) >= 256:
+            raise ValueError("domain is limited to 256 topics (8-bit ids)")
+        for t in self.topics:
+            if t.name == name:
+                raise ValueError(f"duplicate topic {name!r}")
+        topic = Topic(name=name, topic_id=len(self.topics),
+                      publishers=tuple(publishers),
+                      subscribers=tuple(subscribers),
+                      sample_size=sample_size, qos=qos, window=window)
+        self.topics.append(topic)
+        return topic
+
+    def sim_config(self, *, samples_per_publisher: int = 1000,
+                   spindle: bool = True,
+                   target_delivered: Optional[int] = None,
+                   **kw) -> sim.SimConfig:
+        """Build the simulator configuration for this domain.
+
+        All topics must share a QoS for a single run (the protocol flags
+        are global); benchmark each QoS level separately as the paper does.
+        """
+        if not self.topics:
+            raise ValueError("no topics")
+        qos = self.topics[0].qos
+        if any(t.qos is not qos for t in self.topics):
+            raise ValueError("benchmark one QoS level per run")
+        base = (sim.SpindleFlags.spindle() if spindle
+                else sim.SpindleFlags.baseline())
+        flags = qos_flags(qos, base)
+        groups = tuple(
+            sim.SubgroupSpec(members=t.members, senders=t.publishers,
+                             msg_size=t.sample_size, window=t.window,
+                             n_messages=samples_per_publisher)
+            for t in self.topics)
+        return sim.SimConfig(n_nodes=self.n_nodes, subgroups=groups,
+                             flags=flags, target_delivered=target_delivered,
+                             **kw)
+
+
+def single_topic_domain(n_nodes: int, n_subscribers: int,
+                        qos: QoS = QoS.ATOMIC_MULTICAST,
+                        sample_size: int = 10240) -> Domain:
+    """The paper's DDS benchmark: one publisher, varying subscribers,
+    everyone on distinct nodes."""
+    assert n_subscribers + 1 <= n_nodes
+    d = Domain(n_nodes=n_nodes)
+    d.create_topic("bench", publishers=[0],
+                   subscribers=list(range(1, 1 + n_subscribers)),
+                   sample_size=sample_size, qos=qos)
+    return d

@@ -1,0 +1,83 @@
+"""Delivery predicate + total-order delivery (paper Secs. 2.4, 3.2, 3.5).
+
+A message with seq ``s`` is deliverable once every subgroup member's
+``received_num >= s``.  The Spindle delivery predicate takes the *minimum*
+of the received_num column and delivers everything up to it in one batch,
+in round-robin order — opportunistic batching at the delivery stage.
+
+Receiver-delay mitigation (Sec. 3.5) is expressed as two delivery modes:
+  * ``upcall_each``   — one upcall per message (baseline),
+  * ``upcall_batch``  — one upcall per deliverable batch,
+optionally with ``memcpy_out`` (copy the payload out of the ring and return
+immediately, Sec. 4.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sst
+
+Array = Any
+
+
+def stable_seq(received_num_column):
+    """Highest seq received by *all* members (their received_num min).
+
+    received_num_column: (n_members, ...) -> (...,)
+    """
+    xp = jnp if isinstance(received_num_column, jax.Array) else np
+    return xp.min(received_num_column, axis=0)
+
+
+def deliverable_range(delivered_num, received_num_column):
+    """[lo, hi] inclusive seq range newly deliverable; empty if lo > hi."""
+    hi = stable_seq(received_num_column)
+    lo = delivered_num + 1
+    return lo, hi
+
+
+@dataclasses.dataclass
+class DeliveryBatch:
+    """A resolved batch of deliverable messages in delivery order."""
+
+    lo_seq: int
+    hi_seq: int
+    n_senders: int
+
+    def __len__(self) -> int:
+        return max(0, self.hi_seq - self.lo_seq + 1)
+
+    def messages(self):
+        """Yield (seq, sender_rank, sender_index) in delivery order."""
+        for s in range(self.lo_seq, self.hi_seq + 1):
+            yield s, s % self.n_senders, s // self.n_senders
+
+
+def split_app_and_null(batch: DeliveryBatch, null_watermarks) -> tuple:
+    """Count application vs null messages in a batch.
+
+    null_watermarks[s] = number of *application* messages sender s had sent
+    when it appended its nulls is protocol-dependent; the simulator tracks
+    exact per-(sender, index) nullness instead.  This helper exists for the
+    in-graph path where nulls carry a zero payload flag.
+    """
+    raise NotImplementedError(
+        "exact nullness is tracked by the caller; see simulator.py")
+
+
+def deliver(batch: DeliveryBatch,
+            upcall: Callable[[int, int, int], None],
+            batched: bool = True,
+            batch_upcall: Optional[Callable[[DeliveryBatch], None]] = None):
+    """Run delivery upcalls for a batch (host-side plumbing)."""
+    if batched and batch_upcall is not None:
+        batch_upcall(batch)
+        return
+    for seq, rank, idx in batch.messages():
+        upcall(seq, rank, idx)

@@ -1,0 +1,258 @@
+"""Spindle-style gradient synchronization — the paper's techniques applied
+to the data-parallel reduction path of a training step.
+
+Mapping (DESIGN.md Sec. 2):
+
+* **Opportunistic batching** -> *fused gradient buckets*: instead of one
+  collective per parameter tensor (the per-event baseline — the analogue of
+  an ack per message), every ready gradient is coalesced into a small
+  number of large buckets, each reduced with ONE collective.  Bucket sizes
+  are self-balancing (a bucket closes when it reaches ``target_bytes``,
+  never waits), and the bucket *order* is the deterministic round-robin
+  delivery order, so every worker applies updates identically.
+
+* **Ack coalescing via monotonicity** -> step/bucket watermarks: workers
+  advance a monotonic ``delivered_step`` counter once per applied batch of
+  buckets, not per tensor (see :class:`SyncState`).
+
+* **Null-sends** -> *null rounds* for elastic/straggling workers: a worker
+  that cannot contribute a gradient this round contributes an explicit
+  zero with a validity flag; the deterministic round-robin application
+  never stalls, and the mean is rescaled by the live count
+  (:func:`psum_with_validity`).
+
+* **Gradient compression** (beyond-paper distributed-optimization trick):
+  reduce-scatter in accumulation dtype, int8-quantize the owned shard,
+  all-gather the quantized shards — with error feedback carried to the
+  next step (:func:`compressed_psum_mean`).
+
+Everything here is pure-JAX and jit/shard_map friendly; ``axis_name`` is
+the data-parallel mesh axis (or a tuple of axes, e.g. ``('pod','data')``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Bucket plan — the SMC "ring slots" of the gradient plane
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """A static partition of a gradient pytree into contiguous buckets."""
+
+    treedef: Any
+    leaf_shapes: Tuple[Tuple[int, ...], ...]
+    leaf_dtypes: Tuple[Any, ...]
+    leaf_sizes: Tuple[int, ...]
+    # bucket b covers leaves [starts[b], starts[b+1])
+    starts: Tuple[int, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.starts) - 1
+
+    def bucket_leaves(self, b: int) -> range:
+        return range(self.starts[b], self.starts[b + 1])
+
+    def bucket_bytes(self, b: int) -> int:
+        return sum(self.leaf_sizes[i] * np.dtype(self.leaf_dtypes[i]).itemsize
+                   for i in self.bucket_leaves(b))
+
+
+def make_plan(tree: PyTree, target_bytes: int = 32 * 1024 * 1024,
+              pad_to: int = 1) -> BucketPlan:
+    """Greedy bucketization in deterministic leaf order (the delivery
+    order).  A bucket closes as soon as it reaches target_bytes —
+    opportunistic, never waiting for a "full" batch."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) if s else 1 for s in shapes)
+    starts = [0]
+    acc = 0
+    for i, l in enumerate(leaves):
+        acc += sizes[i] * np.dtype(dtypes[i]).itemsize
+        if acc >= target_bytes:
+            starts.append(i + 1)
+            acc = 0
+    if starts[-1] != len(leaves):
+        starts.append(len(leaves))
+    del pad_to
+    return BucketPlan(treedef=treedef, leaf_shapes=shapes,
+                      leaf_dtypes=dtypes, leaf_sizes=sizes,
+                      starts=tuple(starts))
+
+
+def flatten_buckets(grads: PyTree, plan: BucketPlan) -> List[Array]:
+    leaves = jax.tree.leaves(grads)
+    assert len(leaves) == len(plan.leaf_sizes), "plan/tree mismatch"
+    out = []
+    for b in range(plan.n_buckets):
+        parts = [leaves[i].reshape(-1) for i in plan.bucket_leaves(b)]
+        out.append(jnp.concatenate(parts) if len(parts) > 1 else parts[0])
+    return out
+
+
+def unflatten_buckets(buckets: Sequence[Array], plan: BucketPlan) -> PyTree:
+    leaves = []
+    for b, buf in enumerate(buckets):
+        off = 0
+        for i in plan.bucket_leaves(b):
+            n = plan.leaf_sizes[i]
+            leaves.append(buf[off:off + n].reshape(plan.leaf_shapes[i])
+                          .astype(plan.leaf_dtypes[i]))
+            off += n
+    return jax.tree.unflatten(plan.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Reduction modes
+# ---------------------------------------------------------------------------
+
+def _axis_size(axis_name) -> Array:
+    if isinstance(axis_name, (tuple, list)):
+        size = 1
+        for a in axis_name:
+            size = size * jax.lax.psum(1, a) if False else size
+        # psum(1) per axis composes; simpler:
+        return jax.lax.psum(1, tuple(axis_name))
+    return jax.lax.psum(1, axis_name)
+
+
+def per_tensor_psum_mean(grads: PyTree, axis_name) -> PyTree:
+    """Baseline: one collective per tensor (the per-event ack analogue)."""
+    n = _axis_size(axis_name)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / n, grads)
+
+
+def fused_psum_mean(grads: PyTree, plan: BucketPlan, axis_name) -> PyTree:
+    """Spindle: opportunistic fused-bucket reduction — every ready gradient
+    coalesced, one collective per bucket."""
+    n = _axis_size(axis_name)
+    buckets = flatten_buckets(grads, plan)
+    reduced = [jax.lax.psum(b, axis_name) / n for b in buckets]
+    return unflatten_buckets(reduced, plan)
+
+
+def psum_with_validity(grads: PyTree, valid: Array, axis_name,
+                       plan: Optional[BucketPlan] = None) -> Tuple[PyTree, Array]:
+    """Null-round elastic reduction: stragglers contribute a null (zeroed)
+    gradient with ``valid=0``; the mean is over live contributors only, and
+    the round-robin application order never stalls (Sec. 3.3 adaptation).
+
+    Returns (mean_grads, live_count)."""
+    valid_f = valid.astype(jnp.float32)
+    count = jax.lax.psum(valid_f, axis_name)
+    denom = jnp.maximum(count, 1.0)
+
+    def _mask(g):
+        return g * valid_f.astype(g.dtype)
+
+    masked = jax.tree.map(_mask, grads)
+    if plan is None:
+        summed = jax.tree.map(lambda g: jax.lax.psum(g, axis_name), masked)
+    else:
+        buckets = flatten_buckets(masked, plan)
+        summed = unflatten_buckets(
+            [jax.lax.psum(b, axis_name) for b in buckets], plan)
+    return jax.tree.map(lambda g: g / denom.astype(g.dtype), summed), count
+
+
+# ---------------------------------------------------------------------------
+# int8 compressed reduction with error feedback (beyond-paper)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompressionState:
+    """Error-feedback residuals, one per bucket (same shapes as buckets)."""
+
+    residuals: List[Array]
+
+    @classmethod
+    def init(cls, plan: BucketPlan, dtype=jnp.float32) -> "CompressionState":
+        res = [jnp.zeros(sum(plan.leaf_sizes[i]
+                             for i in plan.bucket_leaves(b)), dtype)
+               for b in range(plan.n_buckets)]
+        return cls(residuals=res)
+
+
+def _quantize_int8(x: Array) -> Tuple[Array, Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum_mean(
+        grads: PyTree, plan: BucketPlan, state: CompressionState,
+        axis_name, axis_index: Array) -> Tuple[PyTree, CompressionState]:
+    """reduce_scatter(f32) -> int8-quantize own shard -> all_gather(int8),
+    with error feedback.  Wire bytes: N*4/W (RS) + N (AG, int8) versus
+    N*4/W + N*4 uncompressed — the all-gather leg shrinks 4x.
+
+    Must run inside shard_map over `axis_name`; `axis_index` is
+    ``lax.axis_index(axis_name)``.
+    """
+    n = _axis_size(axis_name)
+    buckets = flatten_buckets(grads, plan)
+    out = []
+    new_res = []
+    for b, (buf, res) in enumerate(zip(buckets, state.residuals)):
+        buf = buf.astype(jnp.float32) + res
+        pad = (-buf.shape[0]) % n
+        bufp = jnp.pad(buf, (0, pad))
+        # reduce_scatter: each worker owns one shard of the bucket sum
+        shard = jax.lax.psum_scatter(
+            bufp.reshape(n, -1), axis_name, scatter_dimension=0,
+            tiled=False) / n
+        q, scale = _quantize_int8(shard)
+        # error feedback: what quantization lost comes back next step
+        err_shard = shard - q.astype(jnp.float32) * scale
+        # scatter the residual back to full-bucket layout (only own shard
+        # is nonzero locally — exact because each worker re-applies its own)
+        res_full = jnp.zeros_like(bufp).reshape(n, -1).at[axis_index].set(
+            err_shard).reshape(-1)
+        new_res.append(res_full[: buf.shape[0]])
+        qg = jax.lax.all_gather(q, axis_name)            # (n, shard) int8
+        sg = jax.lax.all_gather(scale, axis_name)        # (n,) f32
+        full = (qg.astype(jnp.float32) * sg[:, None]).reshape(-1)
+        out.append(full[: buf.shape[0]])
+    return unflatten_buckets(out, plan), CompressionState(residuals=new_res)
+
+
+# ---------------------------------------------------------------------------
+# SyncState — monotonic watermarks for the host runtime (SST analogue)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SyncState:
+    """Per-worker monotonic counters mirrored via the SST pattern.
+
+    ``sent_step``      — rounds this worker contributed (app or null),
+    ``delivered_step`` — last optimizer step applied everywhere (the
+                         checkpoint watermark: restore resumes here),
+    ``null_rounds``    — rounds filled with a null contribution.
+    """
+
+    sent_step: int = 0
+    delivered_step: int = 0
+    null_rounds: int = 0
+
+    def advance(self, *, null: bool = False) -> "SyncState":
+        return SyncState(self.sent_step + 1, self.delivered_step,
+                         self.null_rounds + (1 if null else 0))
+
+    def deliver(self, step: int) -> "SyncState":
+        if step < self.delivered_step:
+            raise ValueError("delivered_step must be monotonic")
+        return SyncState(self.sent_step, step, self.null_rounds)

@@ -1,0 +1,116 @@
+"""SMC — the small-message multicast ring buffer (paper Sec. 2.3).
+
+Each (subgroup, sender) owns ``w`` fixed-size slots laid out in SST
+columns.  A slot is ``(message area, counter)``; the counter's increment
+signals a fresh message.  Message index ``k`` lives in slot ``k % w`` and
+bumps that slot's counter to ``k // w`` (counters start at -1 == unused).
+
+A slot may be reused only once *every* member has delivered the message it
+holds — so sender ``s`` may publish index ``k`` iff ``k < delivered_s + w``
+where ``delivered_s`` is the number of s's messages delivered by the
+slowest member.  Violating this would overwrite an undelivered message.
+
+Total SMC memory per subgroup (Sec. 4.1.2): ``n * w * (m + 8)`` bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sst
+
+Array = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SMCConfig:
+    window: int = 100            # w; Sec. 4.1.2 recommends ~100 for 10 KB
+    max_msg_size: int = 10240    # slot message area, bytes
+    slot_overhead: int = 8       # the slot counter
+
+    @property
+    def slot_bytes(self) -> int:
+        return self.max_msg_size + self.slot_overhead
+
+    def region_bytes(self, n_nodes: int) -> int:
+        """Total pinned SMC memory for one subgroup (n * w * (m + 8))."""
+        return n_nodes * self.window * self.slot_bytes
+
+
+# --- slot arithmetic --------------------------------------------------------
+
+def slot_of(index, window: int):
+    return index % window
+
+
+def counter_for(index, window: int):
+    """Counter value a slot holds after message `index` is written to it."""
+    return index // window
+
+
+def publish_cap(delivered_count, window: int):
+    """Highest publishable index+1 for a sender given the minimum number of
+    its messages delivered across all members."""
+    return delivered_count + window
+
+
+def visible_from_counters(counters, received_count, window: int):
+    """Contiguous-scan of a sender's slot counters (paper's receive
+    predicate): starting from `received_count` (messages already seen),
+    walk forward while the expected slot counter is present.
+
+    counters: (..., w); received_count: (...,) -> new visible count (...,).
+    Vectorized: message index k is visible iff counters[k % w] >= k // w;
+    we take the longest contiguous run starting at received_count, capped
+    at one full window ahead.
+    """
+    xp = jnp if isinstance(counters, jax.Array) else np
+    w = window
+    ks = received_count[..., None] + xp.arange(w)          # candidate indexes
+    have = xp.take_along_axis(counters, ks % w, axis=-1) >= (ks // w)
+    run = xp.cumprod(have.astype(np.int64), axis=-1).sum(axis=-1)
+    return received_count + run
+
+
+# --- functional publish / receive over an SST table -------------------------
+
+def publish(table, node: int, subgroup: int, new_count, window: int):
+    """Write messages [old_count, new_count) into the ring: bump slot
+    counters and the published watermark on the node's own row. Functional.
+    new_count is the total number of messages published after this call."""
+    xp = jnp if isinstance(table["slot_counter"], jax.Array) else np
+    old = table["published_num"][node, subgroup] + 1      # count published
+    counters = table["slot_counter"]
+    if xp is np:
+        counters = counters.copy()
+        for k in range(int(old), int(new_count)):
+            counters[node, subgroup, k % window] = k // window
+        out = dict(table, slot_counter=counters)
+    else:
+        ks = old + jnp.arange(window)
+        mask = ks < new_count
+        slots = ks % window
+        vals = jnp.where(mask, ks // window,
+                         counters[node, subgroup, slots])
+        out = dict(table,
+                   slot_counter=counters.at[node, subgroup, slots].set(vals))
+    return _set_watermark(out, node, subgroup, new_count - 1)
+
+
+def _set_watermark(table, node, subgroup, value):
+    col = table["published_num"]
+    if isinstance(col, np.ndarray):
+        col = col.copy()
+        col[node, subgroup] = max(col[node, subgroup], value)
+        return dict(table, published_num=col)
+    return dict(table, published_num=col.at[node, subgroup].max(value))
+
+
+def free_slots(published_count, delivered_count, window: int):
+    """How many more messages the sender may publish right now."""
+    return publish_cap(delivered_count, window) - published_count

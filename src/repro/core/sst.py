@@ -1,0 +1,210 @@
+"""SST — the Shared State Table (paper Sec. 2.2), adapted to JAX.
+
+The SST models each node's local protocol state as a fixed set of
+*monotonic* variables (counters that only grow, booleans that only flip
+false->true).  Each node owns one row; remote rows are read from a local
+copy that is refreshed by one-sided pushes.  Monotonicity is what makes
+every Spindle optimization sound:
+
+* pushes can be coalesced (advance a counter by +k in one write),
+* a racing local update between lock-release and push is simply absorbed
+  into the same push (Sec. 3.4),
+* merging any stale/fresh mixture of copies with elementwise ``max`` is
+  always safe.
+
+Adaptation note (DESIGN.md Sec. 2): RDMA's cache-line atomicity and
+write-ordering guarantees have no user-visible TPU analogue, so the
+in-graph SST expresses the "guard" pattern as a data dependency instead:
+``push_rows`` returns the merged table and every reader consumes it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SSTColumn:
+    """One monotonic state variable, replicated per node (= per row)."""
+
+    name: str
+    shape: tuple = ()            # trailing shape of the per-row entry
+    dtype: Any = np.int64
+    init: int = -1               # paper: counters start from -1
+
+    def empty(self, n_nodes: int, xp=np) -> Array:
+        return xp.full((n_nodes,) + self.shape, self.init, dtype=self.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSTSchema:
+    columns: tuple
+
+    def __post_init__(self):
+        names = [c.name for c in self.columns]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate SST columns: {names}")
+
+    def column(self, name: str) -> SSTColumn:
+        for c in self.columns:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+    def make_table(self, n_nodes: int, xp=np) -> Dict[str, Array]:
+        """A full table: dict col -> (n_nodes, *shape)."""
+        return {c.name: c.empty(n_nodes, xp) for c in self.columns}
+
+    def row_bytes(self) -> int:
+        return sum(int(np.prod(c.shape, dtype=np.int64)) *
+                   np.dtype(c.dtype).itemsize for c in self.columns)
+
+
+def multicast_schema(n_subgroups: int, window: int,
+                     max_msg_size: int) -> SSTSchema:
+    """The schema of Table 1: received_num / delivered_num per subgroup,
+    plus SMC slot counters (payload bytes are accounted, not stored)."""
+    return SSTSchema(columns=(
+        SSTColumn("received_num", (n_subgroups,)),
+        SSTColumn("delivered_num", (n_subgroups,)),
+        # Published-message watermark per subgroup: the contiguous-scan of
+        # the per-slot counters (Sec. 2.3) reduces to this integer; the
+        # window/ring constraint is enforced in smc.py.
+        SSTColumn("published_num", (n_subgroups,)),
+        # Slot counters kept explicitly so the receive predicate's
+        # slot-polling cost and the ring reuse rule are faithful.
+        SSTColumn("slot_counter", (n_subgroups, window)),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Monotone merge + row push (functional core; numpy or jnp)
+# ---------------------------------------------------------------------------
+
+def merge_tables(local: Mapping[str, Array],
+                 incoming: Mapping[str, Array]) -> Dict[str, Array]:
+    """Elementwise monotone merge — always safe for SST data."""
+    return {k: jnp.maximum(local[k], incoming[k])
+            if isinstance(local[k], jax.Array) or isinstance(incoming[k], jax.Array)
+            else np.maximum(local[k], incoming[k])
+            for k in local}
+
+
+def update_own_row(table: Dict[str, Array], node: int, col: str,
+                   value: Array, *, check: bool = True) -> Dict[str, Array]:
+    """Functionally update node's own row of `col`.  Monotonicity is
+    asserted for host (numpy) tables; jnp tables use max-merge."""
+    cur = table[col][node]
+    if isinstance(table[col], np.ndarray):
+        if check and np.any(np.asarray(value) < cur):
+            raise ValueError(
+                f"non-monotonic SST update to {col}[{node}]: {cur} -> {value}")
+        out = dict(table)
+        new_col = table[col].copy()
+        new_col[node] = value
+        out[col] = new_col
+        return out
+    out = dict(table)
+    out[col] = table[col].at[node].set(jnp.maximum(cur, value))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Round-robin sequence arithmetic (Sec. 2.1 delivery order)
+# ---------------------------------------------------------------------------
+# Messages are M(i, k): sender rank i, sender index k.  Total order:
+#   M(i1,k1) < M(i2,k2)  <=>  k1 < k2 or (k1 == k2 and i1 < i2)
+# seq_num(i, k) = k * n_senders + i.
+
+def seq_of(rank, index, n_senders: int):
+    return index * n_senders + rank
+
+
+def rank_of(seq, n_senders: int):
+    return seq % n_senders
+
+
+def index_of(seq, n_senders: int):
+    return seq // n_senders
+
+
+def rr_prefix(counts) -> Array:
+    """Highest N such that the first N messages of the round-robin order
+    are all present, given per-sender received counts.
+
+    counts: (..., S) integer array; returns (...) array.
+    ``received_num`` (a seq number) is then ``rr_prefix(counts) - 1``.
+    """
+    xp = jnp if isinstance(counts, jax.Array) else np
+    m = xp.min(counts, axis=-1, keepdims=True)          # complete rounds
+    ge = counts >= (m + 1)                               # can extend round m
+    # run-length of True from rank 0: cumprod trick
+    run = xp.cumprod(ge.astype(counts.dtype), axis=-1)
+    extra = xp.sum(run, axis=-1)
+    s = counts.shape[-1]
+    return xp.squeeze(m, -1) * s + extra
+
+
+def sender_counts(seq_prefix, n_senders: int):
+    """Inverse-ish of rr_prefix: per-sender message counts contained in the
+    first ``seq_prefix`` messages of the round-robin order."""
+    xp = jnp if isinstance(seq_prefix, jax.Array) else np
+    seq_prefix = xp.asarray(seq_prefix)
+    full = seq_prefix[..., None] // n_senders
+    rem = seq_prefix[..., None] % n_senders
+    ranks = xp.arange(n_senders)
+    return full + (ranks < rem)
+
+
+# ---------------------------------------------------------------------------
+# In-graph SST: shard_map push of every node's own row
+# ---------------------------------------------------------------------------
+
+def push_rows(own_row: Dict[str, Array], local_copy: Dict[str, Array],
+              axis_name: str) -> Dict[str, Array]:
+    """Inside shard_map: every participant contributes its own row (leading
+    axis 1) and receives the monotone-merged full table.
+
+    This is the TPU analogue of "push my row to every subgroup member":
+    one fused all-gather replaces n-1 one-sided writes, and the monotone
+    ``max`` with the stale local copy makes re-delivery/reordering harmless
+    (exactly the property Sec. 3.4 exploits).
+    """
+    gathered = {k: jax.lax.all_gather(v[0], axis_name) for k, v in own_row.items()}
+    return {k: jnp.maximum(gathered[k], local_copy[k]) for k in gathered}
+
+
+def make_push_rows(mesh: jax.sharding.Mesh, axis_name: str) -> Callable:
+    """A jittable, mesh-closed version of :func:`push_rows`.
+
+    own_row entries are sharded (one row per device along ``axis_name``);
+    local_copy entries are replicated full tables.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def _inner(own_row, local_copy):
+        return push_rows(own_row, local_copy, axis_name)
+
+    n = mesh.shape[axis_name]
+
+    row_spec = P(axis_name)
+    full_spec = P()
+
+    # A PartitionSpec acts as a pytree prefix: row_spec covers every leaf of
+    # own_row, full_spec every leaf of local_copy.
+    fn = shard_map(_inner, mesh=mesh, in_specs=(row_spec, full_spec),
+                   out_specs=full_spec)
+    del n
+    return jax.jit(fn)

@@ -1,0 +1,149 @@
+"""The fused predicate sweep as a pure-JAX protocol round.
+
+On TPU there is no polling thread; the analogue of Derecho's single
+predicate thread (Sec. 2.4) is a single fused program that evaluates every
+node's send/receive/null/delivery predicates over SST arrays in one step —
+vectorized across nodes, jit/scan-able, with *one-round-delayed* visibility
+standing in for wire latency.
+
+This module is the composable, in-graph form of the protocol: the DES in
+:mod:`repro.core.simulator` answers "how fast", this answers "is the logic
+a fixed point of the monotonic predicates" — and it is what the hypothesis
+property tests drive (no-stall, <=1-round skew, quiescence, total order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nullsend, sst
+
+Array = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SweepState:
+    """Protocol state for one subgroup with S senders and N members.
+
+    Visibility model: ``*_vis`` arrays are what each node currently *sees*
+    of the others' rows (its local SST copy); authoritative rows are the
+    diagonal / own entries.  :func:`sweep` returns the post-round state and
+    a new visibility that lags by exactly one round — the jit analogue of
+    the wire.
+    """
+
+    published: Array      # (S,)   authoritative per-sender counts
+    pub_vis: Array        # (N, S) node's view of published counts
+    recv_counts: Array    # (N, S) per-node processed per-sender counts
+    received_num: Array   # (N,)   rr-prefix seq per node
+    recv_vis: Array       # (N, N) node's view of others' received_num
+    delivered_num: Array  # (N,)   per-node delivered seq
+    deliv_vis: Array      # (N, N)
+    app_sent: Array       # (S,)   app messages published so far
+    nulls_sent: Array     # (S,)
+
+    @classmethod
+    def init(cls, n_members: int, n_senders: int) -> "SweepState":
+        z = jnp.zeros
+        return cls(
+            published=z((n_senders,), jnp.int32),
+            pub_vis=z((n_members, n_senders), jnp.int32),
+            recv_counts=z((n_members, n_senders), jnp.int32),
+            received_num=jnp.full((n_members,), -1, jnp.int32),
+            recv_vis=jnp.full((n_members, n_members), -1, jnp.int32),
+            delivered_num=jnp.full((n_members,), -1, jnp.int32),
+            deliv_vis=jnp.full((n_members, n_members), -1, jnp.int32),
+            app_sent=z((n_senders,), jnp.int32),
+            nulls_sent=z((n_senders,), jnp.int32),
+        )
+
+
+def sweep(state: SweepState, app_ready: Array, *, window: int = 1 << 30,
+          null_send: bool = True) -> Tuple[SweepState, Array]:
+    """One fused protocol round for every node simultaneously.
+
+    app_ready: (S,) int32 — app messages each sender wants to publish this
+    round (the send predicate's queue).  Sender rank i is member i (the
+    first S members are the senders, matching Derecho's rank ordering).
+
+    Returns (new_state, delivered_batch_sizes (N,)).
+    """
+    n_members = state.recv_counts.shape[0]
+    n_senders = state.published.shape[0]
+    ranks = jnp.arange(n_senders)
+
+    # --- receive predicate (all nodes): consume everything visible -------
+    recv_counts = jnp.maximum(state.recv_counts, state.pub_vis)
+    received_num = (sst.rr_prefix(recv_counts) - 1).astype(jnp.int32)
+    received_num = jnp.maximum(received_num, state.received_num)
+
+    # --- null predicate (sender nodes) -----------------------------------
+    if null_send:
+        sender_rows = recv_counts[:n_senders]                  # (S, S)
+        have = sender_rows > 0
+        tgt = nullsend.null_target(
+            ranks[:, None], sender_rows - 1, ranks[None, :])
+        tgt = jnp.where(have, tgt, 0)
+        tgt = jnp.where(ranks[None, :] == ranks[:, None], 0, tgt)
+        target = jnp.max(tgt, axis=-1)                         # (S,)
+        next_idx = state.published + app_ready                 # after sends
+        nulls = jnp.maximum(target - next_idx, 0)
+        nulls = jnp.where(app_ready > 0, 0, nulls)
+    else:
+        nulls = jnp.zeros_like(state.published)
+
+    # --- send predicate (sender nodes), ring-window capped ----------------
+    diag = jnp.arange(n_members)
+    deliv_vis_now = state.deliv_vis.at[diag, diag].set(state.delivered_num)
+    min_seq = deliv_vis_now.min(axis=1)[:n_senders]            # (S,)
+    deliv_counts = sst.sender_counts(min_seq + 1, n_senders)   # (S, S)
+    own_deliv = deliv_counts[ranks, ranks]
+    cap = own_deliv + window
+    sendable = jnp.clip(cap - state.published, 0)
+    app_pub = jnp.minimum(app_ready, sendable)
+    published = state.published + app_pub + nulls
+
+    # own publishes are received locally immediately
+    own = jnp.zeros_like(recv_counts).at[ranks, ranks].set(published)
+    recv_counts = jnp.maximum(recv_counts, own)
+    received_num = jnp.maximum(
+        received_num, (sst.rr_prefix(recv_counts) - 1).astype(jnp.int32))
+
+    # --- delivery predicate: min over *visible* received_num --------------
+    # own entry is authoritative; other members' entries lag one round
+    recv_vis = state.recv_vis.at[diag, diag].set(received_num)
+    stable = recv_vis.min(axis=1)                              # (N,)
+    delivered_num = jnp.maximum(state.delivered_num, stable)
+    batch = delivered_num - state.delivered_num
+
+    # --- "wire": visibility catches up to this round's authoritative rows -
+    new = SweepState(
+        published=published,
+        pub_vis=jnp.maximum(state.pub_vis, published[None, :]),
+        recv_counts=recv_counts,
+        received_num=received_num,
+        recv_vis=jnp.maximum(recv_vis, received_num[None, :]),
+        delivered_num=delivered_num,
+        deliv_vis=jnp.maximum(state.deliv_vis, delivered_num[None, :]),
+        app_sent=state.app_sent + app_pub,
+        nulls_sent=state.nulls_sent + nulls,
+    )
+    return new, batch
+
+
+def run_rounds(state: SweepState, app_schedule: Array, *,
+               window: int = 1 << 30, null_send: bool = True
+               ) -> Tuple[SweepState, Array]:
+    """lax.scan over rounds.  app_schedule: (T, S) messages ready per round.
+    Returns final state and (T, N) delivered batch sizes."""
+
+    def body(st, ready):
+        st, batch = sweep(st, ready, window=window, null_send=null_send)
+        return st, batch
+
+    return jax.lax.scan(body, state, app_schedule)

@@ -1,0 +1,148 @@
+"""Virtual-synchrony views (paper Secs. 2.1, 3.3) adapted to elastic
+training membership.
+
+Derecho evolves a top-level group through a sequence of *views* using
+partition-free state-machine replication: each view has a fixed, ordered
+membership; failures/joins/leaves trigger a view change; messages underway
+at a view change are either delivered everywhere or nowhere and resent in
+the next view.
+
+Training adaptation: a view == a training *epoch of membership*.  The
+members are worker hosts, the round-robin "senders" are the data-parallel
+participants, and the cleanup guarantee becomes: an optimizer step is
+either applied by every worker or rolled back to the checkpoint watermark
+(``delivered_step`` in :class:`repro.core.gradsync.SyncState`).
+
+The protocol below is the standard monotone two-phase install driven
+through SST-style state: every row only ever increases, so acknowledgments
+coalesce and stale reads are harmless — which is precisely why it composes
+with the Spindle optimizations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class View:
+    """One membership epoch."""
+
+    vid: int
+    members: Tuple[int, ...]           # ordered — defines delivery ranks
+    senders: Tuple[int, ...]           # active data-parallel participants
+    joiners: Tuple[int, ...] = ()      # members new in this view
+
+    def __post_init__(self):
+        assert tuple(sorted(set(self.members))) == tuple(sorted(self.members))
+        assert set(self.senders) <= set(self.members)
+
+    @property
+    def leader(self) -> int:
+        return self.members[0]
+
+    def rank(self, node: int) -> int:
+        return self.members.index(node)
+
+
+@dataclasses.dataclass
+class _NodeRow:
+    """SST row for membership: all fields are monotone."""
+
+    suspected: set = dataclasses.field(default_factory=set)  # grows only
+    proposed_vid: int = 0        # highest view id this node has proposed/acked
+    wedged_vid: int = -1         # highest view this node stopped sending in
+    installed_vid: int = 0
+    committed_step: int = 0      # checkpoint watermark at wedge time
+
+
+class MembershipService:
+    """A deterministic, in-process view-change engine.
+
+    On a real cluster this state machine runs over the distributed SST
+    (every mutation below is a monotone own-row update + push); here the
+    rows live in one address space so the trainer and tests can drive
+    failures, joins and elastic resizes deterministically.
+    """
+
+    def __init__(self, initial_members: Sequence[int],
+                 senders: Optional[Sequence[int]] = None):
+        members = tuple(sorted(initial_members))
+        self.view = View(vid=0, members=members,
+                         senders=tuple(senders) if senders else members)
+        self.rows: Dict[int, _NodeRow] = {m: _NodeRow() for m in members}
+        self.history: List[View] = [self.view]
+        self.pending_joins: List[int] = []
+
+    # -- failure detection -------------------------------------------------
+
+    def suspect(self, reporter: int, failed: int):
+        """A heartbeat watermark stopped advancing: report a suspicion.
+        Suspicions are monotone (never retracted within a view)."""
+        if failed not in self.view.members:
+            return
+        self.rows[reporter].suspected.add(failed)
+
+    def request_join(self, node: int):
+        if node not in self.view.members and node not in self.pending_joins:
+            self.pending_joins.append(node)
+
+    # -- the two-phase monotone view change ---------------------------------
+
+    def _survivors(self) -> Tuple[int, ...]:
+        all_susp = set()
+        for m in self.view.members:
+            all_susp |= self.rows[m].suspected
+        return tuple(m for m in self.view.members if m not in all_susp)
+
+    def needs_change(self) -> bool:
+        return bool(self._survivors() != self.view.members
+                    or self.pending_joins)
+
+    def propose_and_install(self, committed_steps: Dict[int, int]) -> View:
+        """Run a full view change: wedge -> agree on watermark -> install.
+
+        committed_steps[node] = that node's delivered_step watermark.  The
+        new view's members resume from min over survivors — the virtual
+        synchrony cleanup: steps beyond the watermark are either already
+        applied everywhere or discarded and redone.
+        """
+        if not self.needs_change():
+            return self.view
+        survivors = self._survivors()
+        if not survivors:
+            raise RuntimeError("total failure: no survivors")
+        next_vid = self.view.vid + 1
+        # Phase 1: wedge — survivors stop sending in the old view and
+        # publish their watermark (monotone row updates).
+        for m in survivors:
+            row = self.rows[m]
+            row.wedged_vid = max(row.wedged_vid, self.view.vid)
+            row.proposed_vid = max(row.proposed_vid, next_vid)
+            row.committed_step = max(row.committed_step,
+                                     committed_steps.get(m, 0))
+        # Phase 2: the surviving leader installs once every survivor has
+        # acked (proposed_vid reached next_vid) — trivially true here, on a
+        # cluster this is the poll of the proposed_vid column.
+        assert all(self.rows[m].proposed_vid >= next_vid for m in survivors)
+        joiners = tuple(self.pending_joins)
+        members = tuple(sorted(set(survivors) | set(joiners)))
+        self.pending_joins = []
+        new_view = View(vid=next_vid, members=members, senders=members,
+                        joiners=joiners)
+        for j in joiners:
+            self.rows[j] = _NodeRow()
+        for m in members:
+            self.rows[m].installed_vid = next_vid
+            self.rows[m].suspected = set()
+        self.view = new_view
+        self.history.append(new_view)
+        return new_view
+
+    def restart_watermark(self) -> int:
+        """The step every member of the current view resumes from."""
+        old = set(self.history[-2].members) if len(self.history) > 1 else set()
+        carriers = [m for m in self.view.members if m in old] or \
+            list(self.view.members)
+        return min(self.rows[m].committed_step for m in carriers)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+a pure-jnp oracle in ref.py, and a jit'd public wrapper in ops.py that
+pads/reshapes model-layout tensors and selects interpret mode off-TPU.
+
+  flash_attention  causal GQA flash attention (train / prefill)
+  flash_decode     one-token attention vs a padded KV cache
+  ssd_scan         Mamba2 SSD chunked scan, state carried in VMEM scratch
+  rmsnorm          fused RMSNorm (+ residual) row kernel
+  quantize         block-scaled int8 quant/dequant (gradient compression)
+  smc_sweep        the paper's receive-predicate sweep as a data-movement
+                   kernel (opportunistic batching inner loop)
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,101 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+TPU adaptation notes (DESIGN.md Sec. 2): the GPU flash-attention blocking
+(warps, shared-memory tiles) is rethought for the TPU memory hierarchy —
+HBM -> VMEM block copies driven by BlockSpecs, MXU-aligned 128x128 tiles,
+online-softmax accumulators carried in VMEM scratch across the innermost
+(sequential) grid dimension, and whole-block causal skipping with pl.when
+(the TPU analogue of early-exit warp blocks).
+
+Layout: q (BH, S, D), k/v (BH_kv, S, D) pre-flattened by ops.py; GQA is a
+static head-group division in the BlockSpec index maps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 bq: int, bk: int, causal: bool, scale: float,
+                 n_k_blocks: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (kj * bk <= qi * bq + bq - 1) if causal else True
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 0)
+            cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_k_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_flat(q, k, v, *, group: int, causal: bool = True,
+                         bq: int = 128, bk: int = 128,
+                         interpret: bool = True):
+    """q: (BHq, S, D), k/v: (BHkv, S, D); BHq == BHkv * group.
+
+    Block sizes default to the MXU-native 128.  Sequences are padded by the
+    ops.py wrapper so S % bq == S % bk == 0.
+    """
+    bh, s, d = q.shape
+    assert k.shape[0] * group == bh
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    n_q, n_k = s // bq, s // bk
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_attn_kernel, bq=bq, bk=bk, causal=causal,
+                               scale=scale, n_k_blocks=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,86 @@
+"""Flash decode: one-token attention against a (possibly padded) KV cache.
+
+Grid (BHq, S//bk) with the KV dimension innermost/sequential; positions
+>= kv_len are masked so a statically max-sized cache decodes correctly at
+any fill level.  Memory-bound by design — each cache block is streamed
+through VMEM exactly once (the roofline term this kernel moves is HBM
+bytes, not FLOPs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, bk: int, scale: float,
+                   n_k_blocks: int):
+    kj = pl.program_id(1)
+    kv_len = len_ref[0]
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(kj * bk < kv_len)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale            # (1, D)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (1,bk)
+        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(cols < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_k_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_decode_flat(q, k, v, kv_len, *, group: int, bk: int = 512,
+                      interpret: bool = True):
+    """q: (BHq, 1, D); k/v: (BHkv, S, D); kv_len: scalar int32."""
+    bh, _, d = q.shape
+    s = k.shape[1]
+    assert s % bk == 0, (s, bk)
+    n_k = s // bk
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_decode_kernel, bk=bk, scale=scale,
+                               n_k_blocks=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j: (h // group, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, j: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(kv_len, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,62 @@
+"""Block-scaled int8 quantize/dequantize Pallas kernels.
+
+The hot loop of the compressed gradient multicast
+(repro.core.gradsync.compressed_psum_mean): each (rows,) block of a
+flattened gradient bucket is scaled by its own absmax and rounded to int8.
+On TPU this is a bandwidth kernel — one HBM pass reads f32 and writes
+int8 + one scale per block (4.0x wire reduction for the all-gather leg,
+~3.97x HBM reduction after scales).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)              # (block,)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = jnp.full_like(s_ref, scale)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) *
+                  s_ref[0]).astype(x_ref.dtype)
+
+
+def quantize_pallas(x, *, block: int = 2048, interpret: bool = True):
+    """x: (n,) float -> (q (n,) int8, scales (n/block,) f32)."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    nb = n // block
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int8),
+                   jax.ShapeDtypeStruct((nb,), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_pallas(q, scales, *, block: int = 2048,
+                      out_dtype=jnp.float32, interpret: bool = True):
+    """Inverse of quantize_pallas."""
+    n = q.shape[0]
+    assert n % block == 0 and scales.shape[0] == n // block
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), out_dtype),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) sees 512 placeholder host devices so
+# jax.make_mesh can build the production meshes.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell, print memory_analysis / cost_analysis, and record the roofline
+terms (trip-count-aware, via repro.launch.hloanalysis).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --mesh both
+  python -m repro.launch.dryrun ... --rules <name>   # sharding-rule preset
+
+Results are cached as JSON under results/dryrun/<mesh>/<arch>__<shape>.json
+(one file per cell) so the sweep is restartable.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel
+from repro.launch import hloanalysis
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import layers, registry
+from repro.models.config import SHAPES, shape_by_name
+from repro.models.runtime import Runtime
+from repro.optim import adamw
+from repro.train import rules as rules_lib
+from repro.train.steps import make_serve_step, make_train_step
+
+
+def _shardings_for(specs, rt: Runtime):
+    return layers.tree_shardings(specs, rt.rules_(), rt.mesh)
+
+
+def _batch_shardings(batch_specs, rt: Runtime):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import numpy as np
+    target = rt.rules_().get("batch", ("pod", "data"))
+    axes = target if isinstance(target, tuple) else (target,)
+    batch_axes = tuple(a for a in axes if a in rt.mesh.shape)
+    size = int(np.prod([rt.mesh.shape[a] for a in batch_axes]))
+
+    def shard_one(s):
+        if s.shape and s.shape[0] % size == 0:
+            spec = P(batch_axes) + P(*([None] * (len(s.shape) - 1)))
+        else:
+            spec = P(*([None] * len(s.shape)))
+        return NamedSharding(rt.mesh, spec)
+
+    return jax.tree.map(shard_one, batch_specs)
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             rules_name: str = "baseline",
+             gradsync: str = "gspmd",
+             attn_impl: str = "xla",
+             remat: str = "full") -> Dict[str, Any]:
+    arch = registry.get(arch_name)
+    shape = shape_by_name(shape_name)
+    record: Dict[str, Any] = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "rules": rules_name, "gradsync": gradsync,
+        "attn_impl": attn_impl, "remat": remat,
+    }
+    skip = arch.skip_reason(shape)
+    if skip:
+        record["status"] = "skipped"
+        record["reason"] = skip
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(len(mesh.devices.flatten()))
+    rules = rules_lib.get(rules_name, arch.cfg)
+    batch_target = rules.get("batch", ("pod", "data"))
+    batch_axes = batch_target if isinstance(batch_target, tuple) \
+        else (batch_target,)
+    batch_axes = tuple(a for a in batch_axes if a in mesh.shape)
+    # largest prefix of the DP axes that divides the global batch
+    # (e.g. full_dp wants 512-way but train_4k has batch 256 on the
+    # 2-pod mesh -> fall back to ('pod','data') = 32-way)
+    import numpy as np
+    while batch_axes and shape.global_batch % int(
+            np.prod([mesh.shape[a] for a in batch_axes])) != 0:
+        batch_axes = batch_axes[:-1]
+    rules = dict(rules, batch=batch_axes if len(batch_axes) != 1
+                 else batch_axes[0])
+    rt = Runtime(mesh=mesh, rules=rules, dp_axes=batch_axes,
+                 gradsync=gradsync, attn_impl=attn_impl, remat=remat)
+    t0 = time.time()
+
+    specs = arch.param_specs()
+    params_abs = layers.abstract_tree(specs)
+    params_shard = _shardings_for(specs, rt)
+    input_abs = arch.input_specs(shape)
+    input_shard = _batch_shardings(input_abs, rt)
+
+    if shape.kind == "train":
+        opt_abs = adamw.abstract_state(params_abs)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        opt_shard = {
+            "step": NamedSharding(mesh, P()),
+            "master": params_shard, "m": params_shard, "v": params_shard,
+        }
+        step = make_train_step(arch, rt)
+        jitted = jax.jit(step,
+                         in_shardings=(params_shard, opt_shard,
+                                       input_shard),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_abs, opt_abs, input_abs)
+    elif shape.kind == "prefill":
+        step = make_serve_step(arch, rt, kind="prefill")
+        jitted = jax.jit(step, in_shardings=(params_shard, input_shard))
+        lowered = jitted.lower(params_abs, input_abs)
+    else:  # decode
+        cache_specs = arch.cache_specs(shape)
+        cache_abs = layers.abstract_tree(cache_specs)
+        cache_shard = _shardings_for(cache_specs, rt)
+        step = make_serve_step(arch, rt, kind="decode")
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        pos_shard = NamedSharding(mesh, P())
+        jitted = jax.jit(step,
+                         in_shardings=(params_shard, cache_shard,
+                                       input_shard, pos_shard),
+                         donate_argnums=(1,))
+        pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jitted.lower(params_abs, cache_abs, input_abs, pos_abs)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    met = hloanalysis.analyze_text(hlo_text, n_chips)
+    top = [
+        {"gbytes": round(b / 1e9, 3), "trips": int(k), "comp": c[:40],
+         "op": op, "name": nm[:50]}
+        for b, k, c, op, nm in hloanalysis.top_hbm_instructions(
+            hlo_text, 12)]
+
+    # roofline terms (per system spec; quantities are per-device program,
+    # so term = per-device quantity / per-chip peak)
+    chip = costmodel.TPU_V5E
+    compute_s = met.dot_flops / chip.peak_flops
+    memory_s = met.hbm_bytes / chip.hbm_bw
+    collective_s = met.collective_wire_bytes / chip.ici_bw
+    dominant = max([("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)], key=lambda kv: kv[1])[0]
+
+    n_tokens = shape.global_batch * (shape.seq_len if not shape.is_decode
+                                     else 1)
+    n_params = arch.cfg.active_param_count()
+    model_flops = (6 if shape.kind == "train" else 2) * n_params * n_tokens
+    hlo_flops_global = met.dot_flops * n_chips
+
+    record.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes",
+                                           None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None) or
+            getattr(mem, "temp_size_in_bytes", None),
+        },
+        "xla_cost": {k: cost.get(k) for k in
+                     ("flops", "bytes accessed") if k in cost},
+        "hlo": met.to_dict(),
+        "top_hbm": top,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+            "bound_s": max(compute_s, memory_s, collective_s),
+            "model_flops": model_flops,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_flop_frac": (model_flops / hlo_flops_global
+                                 if hlo_flops_global else None),
+            "tokens_per_s_bound": (n_tokens /
+                                   max(compute_s, memory_s, collective_s)
+                                   if max(compute_s, memory_s,
+                                          collective_s) > 0 else None),
+            "mfu_bound": (model_flops /
+                          (max(compute_s, memory_s, collective_s)
+                           * n_chips * chip.peak_flops)
+                          if max(compute_s, memory_s, collective_s) > 0
+                          else None),
+        },
+    })
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--gradsync", default="gspmd")
+    ap.add_argument("--attn", default="xla",
+                    choices=["xla", "chunked", "pallas"])
+    ap.add_argument("--remat", default="full",
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--variant", default=None,
+                    help="subdirectory name for this configuration")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = registry.names() if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for multi in meshes:
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        outdir = Path(args.out) / mesh_name
+        if args.variant:
+            outdir = outdir / args.variant
+        elif (args.rules, args.gradsync, args.attn, args.remat) != \
+                ("baseline", "gspmd", "xla", "full"):
+            outdir = outdir / f"{args.rules}__{args.gradsync}__" \
+                f"{args.attn}__{args.remat}"
+        outdir.mkdir(parents=True, exist_ok=True)
+        for arch in archs:
+            for shape in shapes:
+                path = outdir / f"{arch}__{shape}.json"
+                if path.exists() and not args.force:
+                    print(f"[cached] {mesh_name} {arch} {shape}")
+                    continue
+                print(f"[dryrun] {mesh_name} {arch} {shape} ...",
+                      flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi, args.rules,
+                                   args.gradsync, args.attn, args.remat)
+                except Exception as e:  # record failures — they are bugs
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                path.write_text(json.dumps(rec, indent=2, default=str))
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" bound={r['bound_s']*1e3:.1f}ms"
+                             f" compile={rec['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"[{status}] {mesh_name} {arch} {shape}{extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,387 @@
+"""Trip-count-aware HLO analysis for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, but every
+model here scans its layers — an 80-layer scan would be undercounted 80x.
+This module parses ``compiled.as_text()`` into its computation graph,
+reads scan trip counts from ``backend_config.known_trip_count`` (falling
+back to loop-condition constants), and accumulates:
+
+  * dot FLOPs            (2 * |result| * |contracted dims|, trip-aware)
+  * HBM traffic estimate (operand+result bytes of non-trivial instructions)
+  * collective breakdown (count / operand bytes / ring-model wire bytes per
+    op type, with replica-group sizes parsed per instruction)
+
+The collective wire-bytes model (per participating device):
+  all-reduce       2 (g-1)/g * B     (ring reduce-scatter + all-gather)
+  all-gather       (g-1) * B         (B = per-device shard posted)
+  reduce-scatter   (g-1)/g * B       (B = full per-device operand)
+  all-to-all       (g-1)/g * B
+  collective-permute   B
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"([a-z][\w\-]*)\(")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+
+
+def _dims_of(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",") if d]
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    n = 1
+    for d in _dims_of(dims):
+        n *= d
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStat:
+    count: int = 0
+    operand_bytes: float = 0.0
+    wire_bytes: float = 0.0
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    op: str
+    result_shapes: List[Tuple[str, str]]
+    operand_refs: List[str]
+    line: str
+
+    def result_bytes(self) -> int:
+        return sum(_bytes_of(d, s) for d, s in self.result_shapes)
+
+
+@dataclasses.dataclass
+class Metrics:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: Dict[str, CollectiveStat] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "Metrics", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.collectives.items():
+            s = self.collectives.setdefault(k, CollectiveStat())
+            s.count += int(v.count * mult)
+            s.operand_bytes += v.operand_bytes * mult
+            s.wire_bytes += v.wire_bytes * mult
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return sum(s.wire_bytes for s in self.collectives.values())
+
+    @property
+    def collective_operand_bytes(self) -> float:
+        return sum(s.operand_bytes for s in self.collectives.values())
+
+    @property
+    def collective_count(self) -> int:
+        return sum(s.count for s in self.collectives.values())
+
+    def to_dict(self) -> dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_operand_bytes": self.collective_operand_bytes,
+            "collective_count": self.collective_count,
+            "collectives": {
+                k: dataclasses.asdict(v)
+                for k, v in sorted(self.collectives.items())},
+        }
+
+
+def _parse(text: str):
+    """-> (computations: name -> [instr], shapes: name -> (dtype, dims))."""
+    comps: Dict[str, List[_Instr]] = {}
+    shapes: Dict[str, Tuple[str, str]] = {}
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if raw and not raw.startswith(" ") and ("->" in raw):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", raw)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None or "=" not in line:
+            continue
+        lhs, rhs = line.split("=", 1)
+        name = lhs.strip().lstrip("%").strip()
+        mop = _OP_RE.search(rhs)
+        if not mop:
+            continue
+        op = mop.group(1)
+        # result type(s): between '=' and the opcode occurrence
+        res_section = rhs[: mop.start()]
+        res_shapes = _SHAPE_RE.findall(res_section)
+        # operands: inside the eventual parens, up to attribute section
+        paren = rhs[mop.end():]
+        depth, end = 1, len(paren)
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        arg_str = paren[:end]
+        refs = _REF_RE.findall(arg_str)
+        instr = _Instr(name=name, op=op, result_shapes=res_shapes,
+                       operand_refs=refs, line=line)
+        comps[cur].append(instr)
+        if res_shapes:
+            if len(res_shapes) == 1:
+                shapes[name] = res_shapes[0]
+            else:
+                shapes[name] = ("tuple:" + ";".join(
+                    f"{d}[{s}]" for d, s in res_shapes), "")
+    return comps, shapes
+
+
+def _shape_bytes_of_ref(shapes, ref: str) -> int:
+    got = shapes.get(ref)
+    if not got:
+        return 0
+    d, s = got
+    if d.startswith("tuple:"):
+        total = 0
+        for part in _SHAPE_RE.findall(d):
+            total += _bytes_of(*part)
+        return total
+    return _bytes_of(d, s)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]*)\}", line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return total_devices
+
+
+def _trip_count(instr: _Instr, comps, shapes) -> float:
+    m = re.search(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)', instr.line)
+    if m:
+        return float(m.group(1))
+    mc = re.search(r"condition=%?([\w.\-]+)", instr.line)
+    if mc and mc.group(1) in comps:
+        best = 1
+        for sub in comps[mc.group(1)]:
+            for mm in re.finditer(r"constant\((\d+)\)", sub.line):
+                best = max(best, int(mm.group(1)))
+        return float(best)
+    return 1.0
+
+
+def analyze_text(text: str, total_devices: int = 1) -> Metrics:
+    comps, shapes = _parse(text)
+    memo: Dict[str, Metrics] = {}
+
+    def evaluate(cname: str, in_fusion: bool = False) -> Metrics:
+        key = f"{cname}:{in_fusion}"
+        if key in memo:
+            return memo[key]
+        memo[key] = Metrics()    # cycle guard
+        met = Metrics()
+        for ins in comps.get(cname, ()):
+            if ins.op in _SKIP_OPS:
+                continue
+            res_bytes = ins.result_bytes()
+            opnd_bytes = sum(_shape_bytes_of_ref(shapes, r)
+                             for r in ins.operand_refs)
+            coll = next((c for c in _COLLECTIVES
+                         if ins.op == c or ins.op.startswith(c + "-")),
+                        None)
+            if coll:
+                g = _group_size(ins.line, total_devices)
+                factor = {"all-reduce": 2.0 * (g - 1) / max(g, 1),
+                          "all-gather": float(g - 1),
+                          "reduce-scatter": (g - 1) / max(g, 1),
+                          "all-to-all": (g - 1) / max(g, 1),
+                          "collective-permute": 1.0}[coll]
+                s = met.collectives.setdefault(coll, CollectiveStat())
+                s.count += 1
+                s.operand_bytes += opnd_bytes
+                s.wire_bytes += opnd_bytes * factor
+                met.hbm_bytes += res_bytes + opnd_bytes
+                continue
+            if ins.op == "dot":
+                if ins.operand_refs:
+                    lhs = shapes.get(ins.operand_refs[0])
+                    if lhs and not lhs[0].startswith("tuple:"):
+                        lhs_dims = _dims_of(lhs[1])
+                        mdims = re.search(
+                            r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+                        contract = 1
+                        if mdims:
+                            for ix in mdims.group(1).split(","):
+                                if ix and int(ix) < len(lhs_dims):
+                                    contract *= lhs_dims[int(ix)]
+                        out_elems = sum(
+                            1 if not s else int(np_prod(s))
+                            for _, s in ins.result_shapes)
+                        met.dot_flops += 2.0 * out_elems * contract
+                if not in_fusion:
+                    met.hbm_bytes += res_bytes + opnd_bytes
+                continue
+            if ins.op in ("fusion", "call"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", ins.line)
+                # the fusion BOUNDARY is the real HBM traffic; fused
+                # interiors stay in registers/VMEM (that is the point)
+                if not in_fusion:
+                    met.hbm_bytes += res_bytes + opnd_bytes
+                if m and m.group(1) in comps:
+                    met.add(evaluate(m.group(1), in_fusion=True), 1.0)
+                continue
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                if mb and mb.group(1) in comps:
+                    met.add(evaluate(mb.group(1), in_fusion=False),
+                            _trip_count(ins, comps, shapes))
+                continue
+            if ins.op == "conditional":
+                for key2 in ("true_computation", "false_computation"):
+                    m = re.search(rf"{key2}=%?([\w.\-]+)", ins.line)
+                    if m and m.group(1) in comps:
+                        met.add(evaluate(m.group(1), in_fusion), 1.0)
+                m = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+                if m:
+                    for ref in _REF_RE.findall(m.group(1)):
+                        if ref in comps:
+                            met.add(evaluate(ref, in_fusion), 1.0)
+                continue
+            if in_fusion:
+                continue   # interior elementwise ops: no HBM traffic
+            if ins.op == "dynamic-slice":
+                met.hbm_bytes += 2 * res_bytes      # read slice + write
+            elif ins.op == "dynamic-update-slice":
+                # in-place window write: read+write the UPDATE region only
+                upd = (_shape_bytes_of_ref(shapes, ins.operand_refs[1])
+                       if len(ins.operand_refs) > 1 else res_bytes)
+                met.hbm_bytes += 2 * upd
+            elif ins.op == "gather":
+                met.hbm_bytes += 2 * res_bytes
+            elif ins.op == "scatter":
+                upd = (_shape_bytes_of_ref(shapes, ins.operand_refs[-1])
+                       if ins.operand_refs else res_bytes)
+                met.hbm_bytes += 3 * upd
+            elif ins.op == "broadcast":
+                met.hbm_bytes += res_bytes
+            else:
+                met.hbm_bytes += res_bytes + opnd_bytes
+        memo[key] = met
+        return met
+
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    entry = m.group(1) if m else (next(iter(comps)) if comps else None)
+    if entry is None:
+        return Metrics()
+    if entry not in comps:
+        entry = next(iter(comps))
+    return evaluate(entry)
+
+
+def np_prod(dims: str) -> int:
+    n = 1
+    for d in _dims_of(dims):
+        n *= d
+    return n
+
+
+def analyze_compiled(compiled, total_devices: int) -> Metrics:
+    return analyze_text(compiled.as_text(), total_devices)
+
+
+def top_hbm_instructions(text: str, n: int = 20):
+    """Perf-loop attribution: the n instructions contributing the most to
+    the (trip-aware) HBM traffic estimate.  Returns
+    [(bytes, trips, computation, op, name), ...] descending."""
+    comps, shapes = _parse(text)
+    # trip multiplier per computation (product along the call chain)
+    mult: Dict[str, float] = {}
+    fusion_interior: Dict[str, bool] = {}
+
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    entry = m.group(1) if m else next(iter(comps), None)
+    if entry is None:
+        return []
+
+    def walk(cname, k, interior):
+        if mult.get(cname, 0) >= k and fusion_interior.get(cname, True) \
+                <= interior:
+            return
+        mult[cname] = max(mult.get(cname, 0), k)
+        fusion_interior[cname] = interior and fusion_interior.get(cname,
+                                                                  True)
+        for ins in comps.get(cname, ()):
+            if ins.op in ("fusion", "call"):
+                mm = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                               ins.line)
+                if mm and mm.group(1) in comps:
+                    walk(mm.group(1), k, True)
+            elif ins.op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                if mb and mb.group(1) in comps:
+                    walk(mb.group(1), k * _trip_count(ins, comps, shapes),
+                         interior)
+
+    walk(entry, 1.0, False)
+    out = []
+    for cname, k in mult.items():
+        if fusion_interior.get(cname):
+            continue
+        for ins in comps.get(cname, ()):
+            if ins.op in _SKIP_OPS or ins.op in ("fusion", "call", "while",
+                                                 "conditional"):
+                if ins.op not in ("fusion", "call"):
+                    continue
+            res_bytes = ins.result_bytes()
+            opnd_bytes = sum(_shape_bytes_of_ref(shapes, r)
+                             for r in ins.operand_refs)
+            if ins.op == "dynamic-slice":
+                b = 2 * res_bytes
+            elif ins.op == "dynamic-update-slice":
+                upd = (_shape_bytes_of_ref(shapes, ins.operand_refs[1])
+                       if len(ins.operand_refs) > 1 else res_bytes)
+                b = 2 * upd
+            elif ins.op == "gather":
+                b = 2 * res_bytes
+            elif ins.op == "scatter":
+                upd = (_shape_bytes_of_ref(shapes, ins.operand_refs[-1])
+                       if ins.operand_refs else res_bytes)
+                b = 3 * upd
+            elif ins.op == "broadcast":
+                b = res_bytes
+            else:
+                b = res_bytes + opnd_bytes
+            out.append((b * k, k, cname, ins.op, ins.name))
+    out.sort(key=lambda t: -t[0])
+    return out[:n]

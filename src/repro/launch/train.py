@@ -1,0 +1,42 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Full configs are for the production mesh (see dryrun.py); on this CPU
+container use ``--reduced`` to train the same family at smoke scale.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.models import registry
+from repro.models.runtime import Runtime
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (CPU-sized) config")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch = registry.get(args.arch)
+    cfg = arch.cfg.reduced() if args.reduced else arch.cfg
+    tcfg = TrainConfig(steps=args.steps, seq_len=args.seq_len,
+                       global_batch=args.global_batch,
+                       checkpoint_dir=args.checkpoint_dir,
+                       checkpoint_every=args.checkpoint_every,
+                       log_every=args.log_every, seed=args.seed)
+    trainer = Trainer(args.arch, cfg, tcfg, Runtime())
+    trainer.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Grouped-query attention: full (train/prefill) and KV-cache decode.
+
+Supports QKV bias (Qwen1.5/Qwen2), qk-norm (Qwen3), GQA with any
+n_kv_heads <= n_heads, RoPE.  The inner product can be computed by the
+pure-jnp reference path (default — XLA fuses it well and the dry-run's
+cost_analysis sees real FLOPs) or by the Pallas flash kernels
+(``impl='pallas'``, validated in interpret mode in tests).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec
+
+Array = Any
+
+
+def attn_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    specs = {
+        "wq": ParamSpec((d, nh, hd), ("fsdp_embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, nkv, hd), ("fsdp_embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, nkv, hd), ("fsdp_embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((nh, hd, d), ("heads", "head_dim", "fsdp_embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((nh, hd), ("heads", "head_dim"),
+                                init="zeros")
+        specs["bk"] = ParamSpec((nkv, hd), ("kv_heads", "head_dim"),
+                                init="zeros")
+        specs["bv"] = ParamSpec((nkv, hd), ("kv_heads", "head_dim"),
+                                init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+    return specs
+
+
+def _project_qkv(p: Dict[str, Array], cfg: ModelConfig, x: Array,
+                 positions: Array) -> Tuple[Array, Array, Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q: Array, k: Array, v: Array, causal: bool,
+          q_offset: Optional[Array] = None,
+          kv_len: Optional[Array] = None) -> Array:
+    """Reference scaled-dot-product GQA attention.
+
+    q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D).  Hq % Hkv == 0.
+    q_offset: absolute position of q[.., 0] — scalar or per-batch (B,)
+    (for decode / chunked prefill).
+    kv_len: number of valid kv positions — scalar or (B,) (padded caches).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    kpos = jnp.arange(skv)                                   # (skv,)
+    # mask built at (B, sq, skv) broadcast granularity
+    mask = jnp.ones((1, sq, skv), dtype=bool)
+    if causal:
+        qpos = jnp.arange(sq)[None, :]                       # (1, sq)
+        if q_offset is not None:
+            off = jnp.asarray(q_offset)
+            off = off[:, None] if off.ndim == 1 else off[None, None]
+            qpos = qpos + off                                # (B|1, sq)
+        mask = mask & (kpos[None, None, :] <= qpos[..., None])
+    if kv_len is not None:
+        kl = jnp.asarray(kv_len)
+        kl = kl[:, None, None] if kl.ndim == 1 else kl[None, None, None]
+        mask = mask & (kpos[None, None, :] < kl)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, d)
+
+
+def _sdpa_chunked(q: Array, k: Array, v: Array, causal: bool,
+                  bq: int = 512, bk: int = 1024) -> Array:
+    """Flash-style blocked attention in pure XLA: an unrolled loop over
+    query blocks, each scanning only the key blocks it can see (causal
+    skipping is structural, not masked-out compute), with online-softmax
+    accumulators.  Peak memory O(bq*bk) instead of O(S^2) — this is the
+    optimization that moves the dry-run's memory roofline term (see
+    EXPERIMENTS.md Sec-Perf) and the XLA twin of kernels/flash_attention.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    nq, nk = s // bq, s // bk
+    scale = 1.0 / (d ** 0.5)
+    qf = (q.astype(jnp.float32) * scale).reshape(b, nq, bq, hkv, group, d)
+    kf = k.reshape(b, nk, bk, hkv, d)
+    vf = v.reshape(b, nk, bk, hkv, d)
+
+    def one_q_block(i: int):
+        qb = qf[:, i]                                   # (b,bq,hkv,g,d)
+        n_vis = ((i + 1) * bq + bk - 1) // bk if causal else nk
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(kf, j, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vf, j, 1, keepdims=False)
+            sc = jnp.einsum("bqhgd,bkhd->bhgqk", qb,
+                            kb.astype(jnp.float32))
+            if causal:
+                rows = i * bq + jnp.arange(bq)[:, None]
+                cols = j * bk + jnp.arange(bk)[None, :]
+                sc = jnp.where(rows >= cols, sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p_ = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p_.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p_, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, group, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, group, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, group, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(n_vis))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (b,hkv,g,bq,d) -> (b,bq,h,d)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, bq, hq, d)
+
+    blocks = [one_q_block(i) for i in range(nq)]
+    out = jnp.concatenate(blocks, axis=1) if nq > 1 else blocks[0]
+    return out.astype(q.dtype)
+
+
+def full_attention(p: Dict[str, Array], cfg: ModelConfig, x: Array,
+                   causal: bool = True, impl: str = "xla") -> Array:
+    """Self-attention over a full sequence (train / prefill)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if impl == "pallas":
+        from repro.kernels import ops
+        out = ops.flash_attention(q, k, v, causal=causal)
+    elif impl == "chunked":
+        out = _sdpa_chunked(q, k, v, causal=causal)
+    else:
+        out = _sdpa(q, k, v, causal=causal)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_attention(p: Dict[str, Array], cfg: ModelConfig, x: Array,
+                    memory: Array) -> Array:
+    """Encoder-decoder cross attention (no causal mask, no rope on kv)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    out = _sdpa(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                   n_layers: Optional[int] = None) -> Dict[str, ParamSpec]:
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    shape = (nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+    axes = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {"k": ParamSpec(shape, axes), "v": ParamSpec(shape, axes)}
+
+
+def decode_attention(p: Dict[str, Array], cfg: ModelConfig, x: Array,
+                     k_cache: Array, v_cache: Array, position: Array,
+                     impl: str = "xla") -> Tuple[Array, Array, Array]:
+    """One-token attention against a cache.
+
+    x: (B, 1, d); k_cache/v_cache: (B, S_max, Hkv, D); position: scalar or
+    per-request (B,) — the index this token writes (cache valid in
+    [0, position]).  Returns (out (B,1,d), new_k, new_v).
+    """
+    position = jnp.asarray(position)
+    b = x.shape[0]
+    pos_vec = position if position.ndim == 1 else \
+        jnp.full((b,), position)
+    q, k, v = _project_qkv(p, cfg, x, pos_vec[:, None])
+    if position.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), position, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), position, axis=1)
+    else:  # per-slot positions (continuous batching)
+        rows = jnp.arange(b)
+        k_cache = k_cache.at[rows, pos_vec].set(
+            k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, pos_vec].set(
+            v[:, 0].astype(v_cache.dtype))
+    if impl == "pallas" and position.ndim == 0:
+        from repro.kernels import ops
+        out = ops.flash_decode(q[:, 0], k_cache, v_cache, position + 1)
+        out = out[:, None]
+    else:
+        out = _sdpa(q, k_cache, v_cache, causal=False,
+                    q_offset=pos_vec, kv_len=pos_vec + 1)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), k_cache, v_cache

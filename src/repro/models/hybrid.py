@@ -1,0 +1,169 @@
+"""Zamba2-style hybrid: a backbone of Mamba2 blocks with ONE shared
+attention+MLP transformer block invoked periodically (weight reuse).
+
+Structure (arXiv:2411.15242, simplified): ``n_layers`` Mamba2 blocks; after
+every ``attn_every``-th block the shared transformer block runs (same
+parameters each invocation — Zamba2's signature parameter-sharing trick).
+The original concatenates the embedding output with the hidden state at
+shared-block inputs and applies per-invocation LoRAs; we keep the shared
+block + periodic schedule and note the simplification in DESIGN.md.
+
+Scan layout: mamba layers are stacked (G, attn_every, ...) and scanned as
+G super-blocks of ``attn_every`` layers, the shared block applying once per
+super-block — HLO stays two-blocks-sized at any depth.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec
+from repro.models.runtime import Runtime
+
+Array = Any
+PyTree = Any
+
+
+def _groups(cfg: ModelConfig) -> Tuple[int, int]:
+    k = cfg.hybrid.attn_every
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k, k
+
+
+def hybrid_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    g, k = _groups(cfg)
+    mamba = {
+        "norm": layers.norm_specs(cfg.d_model),
+        "ssm": ssm.ssm_specs(cfg),
+    }
+    stacked = jax.tree.map(
+        lambda s: ParamSpec((g, k) + s.shape, ("layers", "layers") + s.axes,
+                            s.dtype, s.init),
+        mamba, is_leaf=lambda x: isinstance(x, ParamSpec))
+    shared = {
+        "attn_norm": layers.norm_specs(cfg.d_model),
+        "attn": attention.attn_specs(cfg),
+        "ffn_norm": layers.norm_specs(cfg.d_model),
+        "mlp": layers.mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+    return {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                           ("vocab", "fsdp_embed")),
+        "mamba_layers": stacked,
+        "shared_block": shared,
+        "final_norm": layers.norm_specs(cfg.d_model),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab_size),
+                             ("fsdp_embed", "vocab")),
+    }
+
+
+def _shared_block(p: Dict[str, Array], cfg: ModelConfig, x: Array,
+                  rt: Runtime) -> Array:
+    h = layers.rms_norm(x, p["attn_norm"]["scale"], cfg.norm_eps)
+    x = x + attention.full_attention(p["attn"], cfg, h, causal=True,
+                                     impl=rt.attn_impl)
+    h = layers.rms_norm(x, p["ffn_norm"]["scale"], cfg.norm_eps)
+    m = p["mlp"]
+    return x + layers.swiglu(h, m["w_gate"], m["w_up"], m["w_down"])
+
+
+def forward(params: PyTree, cfg: ModelConfig, x: Array, rt: Runtime) -> Array:
+    g, k = _groups(cfg)
+    shared = params["shared_block"]
+
+    def super_block(carry, lp):
+        def mamba_one(c, lpi):
+            h = layers.rms_norm(c, lpi["norm"]["scale"], cfg.norm_eps)
+            c = c + ssm.mamba_block(lpi["ssm"], cfg, h, impl=rt.ssm_impl)
+            return rt.constrain(c, "batch", "seq", None), None
+
+        carry, _ = jax.lax.scan(mamba_one, carry, lp)
+        carry = _shared_block(shared, cfg, carry, rt)
+        return rt.constrain(carry, "batch", "seq", None), None
+
+    super_block = rt.checkpoint(super_block)
+    x, _ = jax.lax.scan(super_block, x, params["mamba_layers"])
+    return x
+
+
+def lm_loss(params: PyTree, cfg: ModelConfig, batch: Dict[str, Array],
+            rt: Runtime) -> Array:
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        layers.DEFAULT_DTYPE)
+    x = forward(params, cfg, x, rt)
+    x = layers.rms_norm(x[:, :-1], params["final_norm"]["scale"],
+                        cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    mask = batch.get("mask")
+    return layers.cross_entropy_loss(
+        logits, tokens[:, 1:], mask[:, 1:] if mask is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode: SSM states for every mamba layer + ONE KV cache for the shared
+# block per invocation group (the shared block still attends at g points).
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int
+                ) -> Dict[str, Any]:
+    g, k = _groups(cfg)
+    d_inner = cfg.ssm.expand * cfg.d_model
+    nh = d_inner // cfg.ssm.head_dim
+    conv_dim = d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+    return {
+        "ssm_state": ParamSpec(
+            (g, k, batch, nh, cfg.ssm.head_dim, cfg.ssm.d_state),
+            ("layers", "layers", "batch", "ssm_heads", "head_dim",
+             "ssm_state"), dtype=jnp.float32),
+        "conv_state": ParamSpec(
+            (g, k, batch, cfg.ssm.conv_width - 1, conv_dim),
+            ("layers", "layers", "batch", None, "ssm_inner")),
+        # shared attention block: one KV cache per invocation group
+        "k": ParamSpec((g, batch, max_len, cfg.n_kv_heads, cfg.head_dim_),
+                       ("layers", "batch", "seq", "kv_heads", "head_dim")),
+        "v": ParamSpec((g, batch, max_len, cfg.n_kv_heads, cfg.head_dim_),
+                       ("layers", "batch", "seq", "kv_heads", "head_dim")),
+    }
+
+
+def decode_step(params: PyTree, cfg: ModelConfig, cache: Dict[str, Array],
+                tokens: Array, position: Array, rt: Runtime
+                ) -> Tuple[Array, Dict[str, Array]]:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        layers.DEFAULT_DTYPE)
+    shared = params["shared_block"]
+
+    def super_block(carry, xs):
+        lp, sstate, cstate, kc, vc = xs
+
+        def mamba_one(c, xsi):
+            lpi, ss, cs = xsi
+            h = layers.rms_norm(c, lpi["norm"]["scale"], cfg.norm_eps)
+            o, ss, cs = ssm.mamba_decode_block(lpi["ssm"], cfg, h, ss, cs)
+            return c + o, (ss, cs)
+
+        carry, (sstate, cstate) = jax.lax.scan(
+            mamba_one, carry, (lp, sstate, cstate))
+        h = layers.rms_norm(carry, shared["attn_norm"]["scale"],
+                            cfg.norm_eps)
+        a, kc, vc = attention.decode_attention(
+            shared["attn"], cfg, h, kc, vc, position, impl=rt.attn_impl)
+        carry = carry + a
+        h = layers.rms_norm(carry, shared["ffn_norm"]["scale"], cfg.norm_eps)
+        m = shared["mlp"]
+        carry = carry + layers.swiglu(h, m["w_gate"], m["w_up"], m["w_down"])
+        return carry, (sstate, cstate, kc, vc)
+
+    x, (ss, cs, ks, vs) = jax.lax.scan(
+        super_block, x,
+        (params["mamba_layers"], cache["ssm_state"], cache["conv_state"],
+         cache["k"], cache["v"]))
+    x = layers.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits, {"ssm_state": ss, "conv_state": cs, "k": ks, "v": vs}

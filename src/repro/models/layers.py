@@ -1,0 +1,227 @@
+"""Building-block layers and the logical-axis parameter system.
+
+Every parameter is declared as a :class:`ParamSpec` carrying *logical* axis
+names (``'embed'``, ``'heads'``, ``'mlp'``, ``'vocab'``, ``'experts'``,
+``'layers'`` ...).  A sharding-rules table maps logical names to mesh axes;
+changing the table re-lowers the whole model under a different distribution
+without touching model code — this is the main lever the Sec.-Perf
+hillclimbing turns.
+
+All forward functions are pure; parameters are plain nested dicts of
+arrays (or ShapeDtypeStructs for the dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+PyTree = Any
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]     # logical axis per dim
+    dtype: Any = DEFAULT_DTYPE
+    init: str = "normal"                # normal | zeros | ones | scaled
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def stack_layers(self, n: int) -> "ParamSpec":
+        return ParamSpec((n,) + self.shape, ("layers",) + self.axes,
+                         self.dtype, self.init)
+
+
+def initialize(spec: ParamSpec, key: jax.Array) -> Array:
+    """Materialize one parameter (smoke tests / examples only).
+
+    fan_in = product of all non-output dims, excluding stacked 'layers'
+    axes (the last dim is treated as the output; for fused projections
+    like (d, heads, head_dim) this under-scales by sqrt(heads), which is
+    safe — over-scaling is what explodes deep stacks)."""
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = 1
+    for dim, axis in list(zip(spec.shape, spec.axes))[:-1]:
+        if axis != "layers":
+            fan_in *= dim
+    fan_in = fan_in if fan_in > 1 else (spec.shape[-1] or 1)
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale
+            ).astype(spec.dtype)
+
+
+def init_tree(specs: PyTree, key: jax.Array) -> PyTree:
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [initialize(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.abstract(), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis -> mesh-axis rules
+# ---------------------------------------------------------------------------
+
+# The baseline rules (Sec.-Perf iterates on these).  Values may be a mesh
+# axis name, a tuple of mesh axes, or None (replicated).
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "fsdp_embed": "data",       # FSDP-sharded input dim of big matmuls
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv": None,
+}
+
+
+def spec_to_pspec(spec: ParamSpec, rules: Dict[str, Any],
+                  mesh: jax.sharding.Mesh):
+    """PartitionSpec for one parameter under `rules`, with divisibility
+    fallback: a dim whose size does not divide the mapped mesh axes is
+    replicated instead (correct, just less sharded)."""
+    from jax.sharding import PartitionSpec as P
+    out = []
+    for dim, name in zip(spec.shape, spec.axes):
+        target = rules.get(name) if name else None
+        if target is None:
+            out.append(None)
+            continue
+        axes = target if isinstance(target, tuple) else (target,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if size <= 1 or dim % size != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def tree_pspecs(specs: PyTree, rules: Dict[str, Any],
+                mesh: jax.sharding.Mesh) -> PyTree:
+    return jax.tree.map(lambda s: spec_to_pspec(s, rules, mesh), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_shardings(specs: PyTree, rules: Dict[str, Any],
+                   mesh: jax.sharding.Mesh) -> PyTree:
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s, rules, mesh)), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: Array, weight: Array, bias: Array,
+               eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                         # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array,
+           constrain=None) -> Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    if constrain is not None:
+        # pin the hidden activation to the tensor-parallel layout so the
+        # partitioner cannot replicate the (B, S, d_ff) f32 intermediate
+        g = constrain(g, "batch", "seq", "mlp")
+        u = constrain(u, "batch", "seq", "mlp")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def mlp_specs(d_model: int, d_ff: int) -> Dict[str, ParamSpec]:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("fsdp_embed", "mlp")),
+        "w_up": ParamSpec((d_model, d_ff), ("fsdp_embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "fsdp_embed")),
+    }
+
+
+def norm_specs(d_model: int, ln: bool = False) -> Dict[str, ParamSpec]:
+    out = {"scale": ParamSpec((d_model,), ("embed",), init="ones")}
+    if ln:
+        out["bias"] = ParamSpec((d_model,), ("embed",), init="zeros")
+    return out
+
+
+def cross_entropy_loss(logits: Array, labels: Array,
+                       mask: Optional[Array] = None,
+                       z_coef: float = 1e-4) -> Array:
+    """Token-mean CE with z-loss; logits (..., V) f32-accumulated."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1)
+    nll = lse - gold
+    z = z_coef * jnp.square(lse)
+    loss = nll + z
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()

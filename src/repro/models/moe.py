@@ -1,0 +1,169 @@
+"""Mixture-of-Experts with TPU-native expert parallelism.
+
+Design (DESIGN.md Sec. 4): tokens are replicated across the ``model`` mesh
+axis (they already are, in the megatron-style layout), experts are sharded
+across it.  Every model-rank computes the same routing for its local
+tokens, gathers only the slice of the capacity-dispatch table that belongs
+to its experts, runs its experts, and contributes a partial output;
+ONE psum over ``model`` combines — the same collective cost as a dense TP
+MLP, no all-to-all.  This keeps the MoE layer inside the paper's
+"few large collectives beat many small messages" regime.
+
+Dispatch is GShard-style capacity routing: first-choice slots get priority,
+over-capacity tokens drop (their weight mass is simply lost, standard).
+Aux losses: Switch load-balance + router z-loss.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec
+
+Array = Any
+
+
+def _padded_experts(cfg: ModelConfig) -> int:
+    m = cfg.moe
+    return m.ep_pad_to if m.ep_pad_to else m.n_routed
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    m = cfg.moe
+    d, f = cfg.d_model, m.d_ff_expert
+    e = _padded_experts(cfg)
+    specs = {
+        "router": ParamSpec((d, m.n_routed), ("embed", None),
+                            dtype=jnp.float32),
+        "w_gate": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w_down": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if m.n_shared:
+        specs["shared"] = layers.mlp_specs(d, m.n_shared * f)
+    return specs
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(np.ceil(n_tokens * m.top_k * m.capacity_factor
+                    / _padded_experts(cfg)))
+    return max(8, int(np.ceil(c / 8)) * 8)   # pad for TPU lane alignment
+
+
+def route(p: Dict[str, Array], cfg: ModelConfig, x: Array
+          ) -> Tuple[Array, Array, Array]:
+    """Router: top-k experts per token with normalized weights.
+
+    x: (T, d) -> (idx (T,K), weights (T,K), aux_loss scalar)."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.maximum(
+        weights.sum(-1, keepdims=True), 1e-9)
+    # Switch load-balance loss + router z-loss
+    e = m.n_routed
+    frac = jnp.mean(
+        jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = m.aux_coef * e * jnp.sum(frac * mean_prob)
+    z = m.router_z_coef * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return idx, weights, aux + z
+
+
+def dispatch_tables(idx: Array, weights: Array, n_experts: int,
+                    capacity: int, n_tokens: int
+                    ) -> Tuple[Array, Array, Array]:
+    """Capacity-dispatch: (E, C) token-index / weight / valid tables.
+
+    First-choice routes take priority (k-major cumsum order).  Tokens over
+    capacity drop.  Invalid slots carry index == n_tokens (out of bounds ->
+    scatter-drop / gather-fill semantics).
+    """
+    t, k = idx.shape
+    # (K, T, E) one-hot in k-major order => first choices fill slots first
+    oh = jax.nn.one_hot(idx.T, n_experts, dtype=jnp.int32)      # (K,T,E)
+    flat = oh.reshape(k * t, n_experts)
+    pos = jnp.cumsum(flat, axis=0) - 1                          # (K*T, E)
+    pos = jnp.sum(pos * flat, axis=-1)                          # (K*T,)
+    expert = idx.T.reshape(-1)                                  # (K*T,)
+    keep = pos < capacity
+    token = jnp.tile(jnp.arange(t), (k,))
+    w = weights.T.reshape(-1)
+    slot_e = jnp.where(keep, expert, n_experts)                 # OOB drop
+    slot_c = jnp.where(keep, pos, capacity)
+    token_table = jnp.full((n_experts, capacity), n_tokens, jnp.int32)
+    token_table = token_table.at[slot_e, slot_c].set(
+        token.astype(jnp.int32), mode="drop")
+    weight_table = jnp.zeros((n_experts, capacity), jnp.float32)
+    weight_table = weight_table.at[slot_e, slot_c].set(w, mode="drop")
+    valid = token_table < n_tokens
+    return token_table, weight_table, valid
+
+
+def _expert_ffn(xe: Array, wg: Array, wu: Array, wd: Array) -> Array:
+    """xe: (E_l, C, d) through per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", xe, wg)
+    u = jnp.einsum("ecd,edf->ecf", xe, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def moe_block(p: Dict[str, Array], cfg: ModelConfig, x: Array,
+              ep_axis: Optional[str] = None) -> Tuple[Array, Array]:
+    """Full MoE FFN: routed experts (+psum over EP) + shared experts.
+
+    x: (B, S, d).  When ``ep_axis`` is set, this must run inside shard_map
+    with x replicated along that axis and expert weights sharded on it —
+    the expert weights arriving here are then the LOCAL slice, so
+    ``ep_rank``/``ep_size`` come from the axis; otherwise single-program.
+    """
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    if ep_axis is None:
+        y, aux = _moe_ffn_sharded(p, cfg, xt, jnp.int32(0), 1)
+    else:
+        rank = jax.lax.axis_index(ep_axis)
+        size = jax.lax.psum(1, ep_axis)
+        # NOTE: inside shard_map the expert arrays are already local slices;
+        # moe_ffn_local slices the dispatch tables to match.
+        y, aux = _moe_ffn_sharded(p, cfg, xt, rank, size)
+        y = jax.lax.psum(y, ep_axis)
+    y = y.reshape(b, s, d)
+    if cfg.moe.n_shared:
+        sh = p["shared"]
+        y = y + layers.swiglu(x, sh["w_gate"], sh["w_up"], sh["w_down"])
+    return y, aux
+
+
+def _moe_ffn_sharded(p: Dict[str, Array], cfg: ModelConfig, x: Array,
+                     ep_rank: Array, ep_size: int) -> Tuple[Array, Array]:
+    """Like moe_ffn_local but expert weights are pre-sliced by shard_map."""
+    t, d = x.shape
+    e_pad = _padded_experts(cfg)
+    e_local = p["w_gate"].shape[0]
+    assert e_local * ep_size == e_pad
+    cap = _capacity(t, cfg)
+    idx, weights, aux = route(p, cfg, x)
+    token_table, weight_table, valid = dispatch_tables(
+        idx, weights, e_pad, cap, t)
+    lo = ep_rank * e_local
+    tt = jax.lax.dynamic_slice(token_table, (lo, 0), (e_local, cap))
+    wt = jax.lax.dynamic_slice(weight_table, (lo, 0), (e_local, cap))
+    vt = jax.lax.dynamic_slice(valid, (lo, 0), (e_local, cap))
+    xg = jnp.take(x, jnp.clip(tt, 0, t - 1).reshape(-1), axis=0)
+    xg = xg.reshape(e_local, cap, d) * vt[..., None].astype(x.dtype)
+    ye = _expert_ffn(xg, p["w_gate"], p["w_up"], p["w_down"])
+    ye = ye * (wt * vt).astype(ye.dtype)[..., None]
+    y = jnp.zeros((t, d), ye.dtype).at[tt.reshape(-1)].add(
+        ye.reshape(-1, d), mode="drop")
+    return y, aux

@@ -1,0 +1,256 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+For every architecture this module answers:
+  * ``param_specs(cfg)``      — the full parameter pytree (ParamSpec leaves)
+  * ``loss_fn(cfg)``          — train-step loss callable
+  * ``prefill_fn / decode_fn``— serving entry points
+  * ``input_specs(cfg, shape)``— ShapeDtypeStruct stand-ins for every input
+  * ``cache_specs(cfg, shape)``— decode-state pytree for decode shapes
+  * ``skip_reason(cfg, shape)``— why a cell is skipped (or None)
+
+The ten assigned architecture configs live in :mod:`repro.configs`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (attention, encdec, hybrid, layers, ssm,
+                          transformer, vlm)
+from repro.models.config import ModelConfig, ShapeConfig, shape_by_name
+from repro.models.layers import ParamSpec
+from repro.models.runtime import Runtime
+
+Array = Any
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# ssm-family LM (mamba2): thin assembly over ssm.py blocks
+# ---------------------------------------------------------------------------
+
+def _ssm_lm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    block = {"norm": layers.norm_specs(cfg.d_model),
+             "ssm": ssm.ssm_specs(cfg)}
+    stacked = jax.tree.map(lambda s: s.stack_layers(cfg.n_layers), block,
+                           is_leaf=lambda x: isinstance(x, ParamSpec))
+    return {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                           ("vocab", "fsdp_embed")),
+        "layers": stacked,
+        "final_norm": layers.norm_specs(cfg.d_model),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab_size),
+                             ("fsdp_embed", "vocab")),
+    }
+
+
+def _ssm_lm_loss(params, cfg: ModelConfig, batch, rt: Runtime):
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        layers.DEFAULT_DTYPE)
+
+    def body(carry, lp):
+        h = layers.rms_norm(carry, lp["norm"]["scale"], cfg.norm_eps)
+        carry = carry + ssm.mamba_block(lp["ssm"], cfg, h, impl=rt.ssm_impl)
+        return rt.constrain(carry, "batch", "seq", None), None
+
+    body = rt.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = layers.rms_norm(x[:, :-1], params["final_norm"]["scale"],
+                        cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    mask = batch.get("mask")
+    return layers.cross_entropy_loss(
+        logits, tokens[:, 1:], mask[:, 1:] if mask is not None else None)
+
+
+def _ssm_decode_step(params, cfg: ModelConfig, cache, tokens, position,
+                     rt: Runtime):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        layers.DEFAULT_DTYPE)
+
+    def body(carry, xs):
+        lp, sstate, cstate = xs
+        h = layers.rms_norm(carry, lp["norm"]["scale"], cfg.norm_eps)
+        o, sstate, cstate = ssm.mamba_decode_block(lp["ssm"], cfg, h,
+                                                   sstate, cstate)
+        return carry + o, (sstate, cstate)
+
+    x, (ss, cs) = jax.lax.scan(body, x, (params["layers"],
+                                         cache["ssm_state"],
+                                         cache["conv_state"]))
+    x = layers.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return logits, {"ssm_state": ss, "conv_state": cs}
+
+
+# ---------------------------------------------------------------------------
+# Arch record
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    cfg: ModelConfig
+
+    # -- parameters ---------------------------------------------------------
+    def param_specs(self) -> PyTree:
+        return param_specs(self.cfg)
+
+    # -- train --------------------------------------------------------------
+    def loss_fn(self) -> Callable:
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return transformer.lm_loss
+        if f == "ssm":
+            return _ssm_lm_loss
+        if f == "hybrid":
+            return hybrid.lm_loss
+        if f == "encdec":
+            return encdec.seq2seq_loss
+        if f == "vlm":
+            return vlm.vlm_loss
+        raise KeyError(f)
+
+    # -- serve ----------------------------------------------------------------
+    def prefill_fn(self) -> Callable:
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return lambda p, b, rt: transformer.prefill(
+                p, self.cfg, b["tokens"], rt)
+        if f == "vlm":
+            return lambda p, b, rt: vlm.prefill(p, self.cfg, b, rt)
+        if f == "encdec":
+            def _enc_prefill(p, b, rt):
+                memory = encdec.encode(p, self.cfg, b["frames"], rt)
+                return memory, {}
+            return _enc_prefill
+        if f in ("ssm", "hybrid"):
+            # prefill for recurrent families == chunked forward; lowered as
+            # the train-shaped forward without loss
+            return None
+        raise KeyError(f)
+
+    def decode_fn(self) -> Callable:
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.decode_step
+        if f == "ssm":
+            return _ssm_decode_step
+        if f == "hybrid":
+            return hybrid.decode_step
+        if f == "encdec":
+            return encdec.decode_step
+        raise KeyError(f)
+
+    # -- shapes -----------------------------------------------------------------
+    def skip_reason(self, shape: ShapeConfig) -> Optional[str]:
+        for name, reason in self.cfg.skip_shapes:
+            if name == shape.name:
+                return reason
+        return None
+
+    def input_specs(self, shape: ShapeConfig, *, batch_override=None
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+        return input_specs(self.cfg, shape, batch_override=batch_override)
+
+    def cache_specs(self, shape: ShapeConfig, *, batch_override=None
+                    ) -> PyTree:
+        return cache_specs(self.cfg, shape, batch_override=batch_override)
+
+
+# ---------------------------------------------------------------------------
+# Free functions (dispatch on family)
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> PyTree:
+    f = cfg.family
+    if f in ("dense", "moe"):
+        return transformer.lm_specs(cfg)
+    if f == "ssm":
+        return _ssm_lm_specs(cfg)
+    if f == "hybrid":
+        return hybrid.hybrid_specs(cfg)
+    if f == "encdec":
+        return encdec.encdec_specs(cfg)
+    if f == "vlm":
+        return vlm.vlm_specs(cfg)
+    raise KeyError(f)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                batch_override: Optional[int] = None
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    b = batch_override if batch_override is not None else shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    bf16 = layers.DEFAULT_DTYPE
+    f = cfg.family
+    if shape.kind == "decode":
+        tok = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        if f == "encdec":
+            return tok
+        return tok
+    if f == "encdec":
+        half = s // 2
+        return {
+            "frames": jax.ShapeDtypeStruct((b, half, cfg.d_model), bf16),
+            "tokens": jax.ShapeDtypeStruct((b, half), i32),
+        }
+    if f == "vlm":
+        n_p = cfg.vlm.n_patches
+        return {
+            "patches": jax.ShapeDtypeStruct((b, n_p, cfg.vlm.vision_dim),
+                                            bf16),
+            "tokens": jax.ShapeDtypeStruct((b, s - n_p), i32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                batch_override: Optional[int] = None) -> PyTree:
+    """Decode-state ParamSpec pytree sized for `shape` (cache of seq_len)."""
+    b = batch_override if batch_override is not None else shape.global_batch
+    s = shape.seq_len
+    f = cfg.family
+    if f in ("dense", "moe", "vlm"):
+        return attention.kv_cache_specs(cfg, b, s)
+    if f == "ssm":
+        return ssm.ssm_cache_specs(cfg, b)
+    if f == "hybrid":
+        return hybrid.cache_specs(cfg, b, s)
+    if f == "encdec":
+        return encdec.cache_specs(cfg, b, s, src_len=s)
+    raise KeyError(f)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str, builder: Callable[[], ModelConfig]):
+    _REGISTRY[name] = builder
+
+
+def get(name: str) -> Arch:
+    _ensure_configs_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+    return Arch(cfg=_REGISTRY[name]())
+
+
+def names() -> Tuple[str, ...]:
+    _ensure_configs_loaded()
+    return tuple(sorted(_REGISTRY))
+
+
+def _ensure_configs_loaded():
+    import repro.configs  # noqa: F401  (registers all archs on import)

@@ -1,0 +1,83 @@
+"""Runtime context: mesh, sharding rules and implementation switches.
+
+A single :class:`Runtime` is threaded through every forward function; the
+dry-run, the trainer and the serving engine build different ones.  All of
+its fields are hillclimbing levers for the Sec.-Perf loop: logical->mesh
+rules, remat policy, attention/SSD kernel implementation, and the gradient
+reduction mode (GSPMD-implicit vs Spindle fused buckets vs compressed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    mesh: Optional[jax.sharding.Mesh] = None
+    rules: Optional[Dict[str, Any]] = None
+    attn_impl: str = "xla"            # xla | pallas
+    ssm_impl: str = "xla"             # xla | pallas
+    remat: str = "full"               # none | full | dots
+    dp_axes: Tuple[str, ...] = ("data",)
+    ep_axis: Optional[str] = "model"
+    gradsync: str = "gspmd"           # gspmd | spindle | spindle_compressed
+
+    def rules_(self) -> Dict[str, Any]:
+        return self.rules if self.rules is not None else layers.DEFAULT_RULES
+
+    @property
+    def spmd(self) -> bool:
+        return self.mesh is not None and len(self.mesh.devices.flatten()) > 1
+
+    def constrain(self, x, *logical_axes):
+        """Apply a sharding constraint by logical axis names (None entries
+        = replicated dims).  No-op off-mesh."""
+        if not self.spmd:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        rules = self.rules_()
+        spec = []
+        used = set()
+        for dim, name in zip(x.shape, logical_axes):
+            target = rules.get(name) if name else None
+            if target is None:
+                spec.append(None)
+                continue
+            axes = target if isinstance(target, tuple) else (target,)
+            # a mesh axis can shard at most one dim: first logical axis
+            # in the rules wins (e.g. seq@model beats mlp@model under the
+            # sequence-parallel presets)
+            axes = tuple(a for a in axes
+                         if a in self.mesh.shape and a not in used)
+            import numpy as np
+            size = int(np.prod([self.mesh.shape[a] for a in axes])) or 1
+            if not axes or dim % size != 0:
+                spec.append(None)
+            else:
+                used.update(axes)
+                spec.append(axes if len(axes) > 1 else axes[0])
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def checkpoint(self, fn):
+        if self.remat == "none":
+            return fn
+        if self.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.checkpoint_dots)
+        return jax.checkpoint(fn)
+
+    def moe_ep_size(self) -> int:
+        if not self.spmd or self.ep_axis not in (self.mesh.shape if self.mesh else {}):
+            return 1
+        return int(self.mesh.shape[self.ep_axis])
+
+
+CPU_RUNTIME = Runtime()

@@ -1,0 +1,245 @@
+"""Mamba2 — SSD (state-space duality) blocks, pure JAX.
+
+The chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): within a chunk the
+output is computed in quadratic attention-like form; across chunks a linear
+recurrence carries the (H, P, N) state, evaluated with an associative scan.
+Decode is the exact single-step recurrence over the same state, so
+``long_500k`` costs O(1) per token — the sub-quadratic path the shape table
+requires for ssm/hybrid architectures.
+
+Layout follows the reference implementation: d_inner = expand * d_model,
+H = d_inner / head_dim heads, scalar decay A per head, B/C shared across
+heads in ``n_groups`` groups.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig, SSMConfig
+from repro.models.layers import ParamSpec
+
+Array = Any
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.d_state, s.n_groups
+
+
+def ssm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner, nh, hp, dn, ng = _dims(cfg)
+    conv_dim = d_inner + 2 * ng * dn
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": ParamSpec((d, 2 * d_inner + 2 * ng * dn + nh),
+                          ("fsdp_embed", "ssm_inner")),
+        "conv_w": ParamSpec((s.conv_width, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((nh,), ("ssm_heads",), init="ones",
+                           dtype=jnp.float32),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros",
+                             dtype=jnp.float32),
+        "d_skip": ParamSpec((nh,), ("ssm_heads",), init="ones",
+                            dtype=jnp.float32),
+        "norm": ParamSpec((d_inner,), ("ssm_inner",), init="ones"),
+        "w_out": ParamSpec((d_inner, d), ("ssm_inner", "fsdp_embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: Array):
+    d_inner, nh, hp, dn, ng = _dims(cfg)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner + 2 * ng * dn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (B, S, C) with kernel (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum(x: Array) -> Array:
+    """exp-stable segment-sum: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    t = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                d_skip: Array, dt_bias: Array, chunk: int,
+                init_state: Optional[Array] = None,
+                ) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x: (B, S, H, P)  dt: (B, S, H)  b,c: (B, S, G, N)  a_log/dt_bias/d_skip: (H,)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)      # (B,S,H)
+    a = -jnp.exp(a_log.astype(jnp.float32))                     # (H,)
+    da = dt * a                                                 # (B,S,H)
+    xdt = x.astype(jnp.float32) * dt[..., None]                 # B x_t dt
+
+    # reshape into chunks
+    def ch(t, extra=()):
+        return t.reshape(t.shape[0], nc, chunk, *t.shape[2:])
+    xc = ch(xdt)                                                # (B,nc,L,H,P)
+    bc = ch(b.astype(jnp.float32))                              # (B,nc,L,G,N)
+    cc = ch(c.astype(jnp.float32))
+    dac = ch(da).transpose(0, 3, 1, 2)                          # (B,H,nc,L)
+
+    da_cs = jnp.cumsum(dac, axis=-1)                            # (B,H,nc,L)
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    lmat = jnp.exp(_segsum(dac))                                # (B,H,nc,L,L)
+    bheads = jnp.repeat(bc, rep, axis=3)                        # (B,nc,L,H,N)
+    cheads = jnp.repeat(cc, rep, axis=3)
+    scores = jnp.einsum("bclhn,bcshn->bhcls", cheads, bheads)   # (B,H,nc,L,L)
+    y_diag = jnp.einsum("bhcls,bhcls,bcshp->bclhp",
+                        scores, lmat, xc)
+
+    # ---- chunk-final states ----
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)             # (B,H,nc,L)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn",
+                        bheads, decay_states, xc)               # (B,nc,H,P,N)
+
+    # ---- inter-chunk linear recurrence (associative scan) ----
+    chunk_decay = jnp.exp(da_cs[..., -1]).transpose(0, 2, 1)    # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def combine(left, right):
+        dl, sl = left
+        dr, sr = right
+        return dl * dr, sr + dr * sl
+
+    decays, carried = jax.lax.associative_scan(
+        combine, (chunk_decay[..., None, None], states), axis=1)
+    # carried[c] = state at end of chunk c from chunks <= c (excl. init)
+    total_decay = decays                                        # (B,nc,H,1,1)
+    carried = carried + total_decay * init_state[:, None]
+    # state entering chunk c = carried[c-1] (init for c=0)
+    prev = jnp.concatenate([init_state[:, None], carried[:, :-1]], axis=1)
+
+    # ---- chunk-state contribution to outputs ----
+    state_decay = jnp.exp(da_cs)                                # (B,H,nc,L)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp",
+                       cheads, prev, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), carried[:, -1]
+
+
+def ssd_decode_step(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                    d_skip: Array, dt_bias: Array, state: Array,
+                    ) -> Tuple[Array, Array]:
+    """Exact single-token recurrence.
+
+    x: (B, H, P); dt: (B, H); b,c: (B, G, N); state: (B, H, P, N).
+    """
+    h, p = x.shape[1], x.shape[2]
+    g = b.shape[1]
+    rep = h // g
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                     # (B,H)
+    bh = jnp.repeat(b.astype(jnp.float32), rep, axis=1)         # (B,H,N)
+    ch = jnp.repeat(c.astype(jnp.float32), rep, axis=1)
+    xf = x.astype(jnp.float32)
+    new_state = decay[..., None, None] * state + \
+        jnp.einsum("bh,bhp,bhn->bhpn", dt, xf, bh)
+    y = jnp.einsum("bhn,bhpn->bhp", ch, new_state)
+    y = y + d_skip[None, :, None] * xf
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def mamba_block(p: Dict[str, Array], cfg: ModelConfig, x: Array,
+                impl: str = "xla") -> Array:
+    """Full-sequence Mamba2 block.  x: (B, S, d_model)."""
+    d_inner, nh, hp, dn, ng = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + ng * dn], axis=-1)
+    bsz, s = x.shape[0], x.shape[1]
+    xs = xs.reshape(bsz, s, nh, hp)
+    b = b.reshape(bsz, s, ng, dn)
+    c = c.reshape(bsz, s, ng, dn)
+    if impl == "pallas":
+        from repro.kernels import ops
+        y, _ = ops.ssd_scan(xs, dt, p["a_log"], b, c, p["d_skip"],
+                            p["dt_bias"], cfg.ssm.chunk)
+    else:
+        y, _ = ssd_chunked(xs, dt, p["a_log"], b, c, p["d_skip"],
+                           p["dt_bias"], cfg.ssm.chunk)
+    y = y.reshape(bsz, s, d_inner)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(
+        y.dtype), p["norm"], cfg.norm_eps)
+    return jnp.einsum("be,ed->bd" if y.ndim == 2 else "bse,ed->bsd",
+                      y, p["w_out"])
+
+
+def ssm_cache_specs(cfg: ModelConfig, batch: int,
+                    n_layers: Optional[int] = None) -> Dict[str, ParamSpec]:
+    d_inner, nh, hp, dn, ng = _dims(cfg)
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    conv_dim = d_inner + 2 * ng * dn
+    return {
+        "ssm_state": ParamSpec((nl, batch, nh, hp, dn),
+                               ("layers", "batch", "ssm_heads",
+                                "head_dim", "ssm_state"),
+                               dtype=jnp.float32),
+        "conv_state": ParamSpec((nl, batch, cfg.ssm.conv_width - 1,
+                                 conv_dim),
+                                ("layers", "batch", None, "ssm_inner")),
+    }
+
+
+def mamba_decode_block(p: Dict[str, Array], cfg: ModelConfig, x: Array,
+                       ssm_state: Array, conv_state: Array,
+                       ) -> Tuple[Array, Array, Array]:
+    """One-token Mamba2 step.  x: (B, 1, d_model);
+    ssm_state: (B, H, P, N); conv_state: (B, W-1, conv_dim)."""
+    d_inner, nh, hp, dn, ng = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])[:, 0]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    # rolling conv state
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv_state = window[:, 1:]
+    xs, b, c = jnp.split(conv_out, [d_inner, d_inner + ng * dn], axis=-1)
+    bsz = x.shape[0]
+    y, new_ssm_state = ssd_decode_step(
+        xs.reshape(bsz, nh, hp), dt, p["a_log"],
+        b.reshape(bsz, ng, dn), c.reshape(bsz, ng, dn),
+        p["d_skip"], p["dt_bias"], ssm_state)
+    y = y.reshape(bsz, d_inner)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(
+        y.dtype), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["w_out"])[:, None]
+    return out, new_ssm_state, new_conv_state

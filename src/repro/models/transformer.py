@@ -1,0 +1,217 @@
+"""Decoder-only LM: dense and MoE variants, train / prefill / decode.
+
+Layers are scanned over stacked parameters so the HLO stays one-block-sized
+at any depth (essential for 512-device dry-run compiles), with a
+configurable remat policy.  The MoE FFN runs under shard_map expert
+parallelism when a mesh is present (see repro.models.moe).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec
+from repro.models.runtime import Runtime
+
+Array = Any
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "attn_norm": layers.norm_specs(cfg.d_model),
+        "attn": attention.attn_specs(cfg),
+        "ffn_norm": layers.norm_specs(cfg.d_model),
+    }
+    if cfg.moe is not None:
+        specs["moe"] = moe.moe_specs(cfg)
+    else:
+        specs["mlp"] = layers.mlp_specs(cfg.d_model, cfg.d_ff)
+    return specs
+
+
+def stack_block_specs(cfg: ModelConfig, n_layers: int) -> Dict[str, Any]:
+    base = block_specs(cfg)
+    return jax.tree.map(lambda s: s.stack_layers(n_layers), base,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def lm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                           ("vocab", "fsdp_embed")),
+        "layers": stack_block_specs(cfg, cfg.n_layers),
+        "final_norm": layers.norm_specs(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("fsdp_embed", "vocab"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _ffn(p: Dict[str, Array], cfg: ModelConfig, x: Array, rt: Runtime
+         ) -> Tuple[Array, Array]:
+    if cfg.moe is None:
+        m = p["mlp"]
+        return layers.swiglu(x, m["w_gate"], m["w_up"], m["w_down"],
+                             constrain=rt.constrain), \
+            jnp.zeros((), jnp.float32)
+    ep = rt.moe_ep_size()
+    if ep <= 1:
+        return moe.moe_block(p["moe"], cfg, x, ep_axis=None)
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+    batch_axes = tuple(a for a in ("pod", "data") if a in rt.mesh.shape)
+    tok_spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
+                 None, None) if batch_axes else P(None, None, None)
+    expert_specs = {
+        "router": P(None, None),
+        "w_gate": P("model", None, None),
+        "w_up": P("model", None, None),
+        "w_down": P("model", None, None),
+    }
+    if cfg.moe.n_shared:
+        expert_specs["shared"] = {k: P(None, None)
+                                  for k in ("w_gate", "w_up", "w_down")}
+
+    def _moe_local(pp, xx):
+        return moe.moe_block(pp, cfg, xx, ep_axis=rt.ep_axis)
+
+    fn = shard_map(
+        _moe_local,
+        mesh=rt.mesh,
+        in_specs=(expert_specs, tok_spec),
+        out_specs=(tok_spec, P()),
+        check_vma=False,
+    )
+    return fn(p["moe"], x)
+
+
+def block(p: Dict[str, Array], cfg: ModelConfig, x: Array, rt: Runtime
+          ) -> Tuple[Array, Array]:
+    """One decoder block: pre-norm attn + pre-norm FFN.  x: (B, S, d)."""
+    h = layers.rms_norm(x, p["attn_norm"]["scale"], cfg.norm_eps)
+    x = x + attention.full_attention(p["attn"], cfg, h, causal=True,
+                                     impl=rt.attn_impl)
+    x = rt.constrain(x, "batch", "seq", None)
+    h = layers.rms_norm(x, p["ffn_norm"]["scale"], cfg.norm_eps)
+    y, aux = _ffn(p, cfg, h, rt)
+    x = x + y
+    return rt.constrain(x, "batch", "seq", None), aux
+
+
+def decode_block(p: Dict[str, Array], cfg: ModelConfig, x: Array,
+                 k_cache: Array, v_cache: Array, position: Array,
+                 rt: Runtime) -> Tuple[Array, Array, Array, Array]:
+    h = layers.rms_norm(x, p["attn_norm"]["scale"], cfg.norm_eps)
+    a, k_cache, v_cache = attention.decode_attention(
+        p["attn"], cfg, h, k_cache, v_cache, position, impl=rt.attn_impl)
+    x = x + a
+    h = layers.rms_norm(x, p["ffn_norm"]["scale"], cfg.norm_eps)
+    y, aux = _ffn(p, cfg, h, rt)
+    del aux
+    return x + y, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Model-level forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+def embed(params: PyTree, cfg: ModelConfig, tokens: Array,
+          rt: Runtime) -> Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(layers.DEFAULT_DTYPE)
+    return rt.constrain(x, "batch", "seq", None)
+
+
+def unembed(params: PyTree, cfg: ModelConfig, x: Array, rt: Runtime) -> Array:
+    x = layers.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return rt.constrain(logits, "batch", None, "vocab")
+
+
+def forward(params: PyTree, cfg: ModelConfig, x: Array, rt: Runtime,
+            ) -> Tuple[Array, Array]:
+    """Run the scanned decoder stack on embedded inputs.
+    Returns (hidden (B,S,d), total moe aux loss)."""
+
+    def body(carry, lp):
+        h, aux = block(lp, cfg, carry, rt)
+        return h, aux
+
+    body = rt.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, params["layers"])
+    return x, jnp.sum(auxs)
+
+
+def lm_loss(params: PyTree, cfg: ModelConfig, batch: Dict[str, Array],
+            rt: Runtime) -> Array:
+    """Next-token CE over `tokens`; `mask` marks valid target positions."""
+    tokens = batch["tokens"]
+    x = embed(params, cfg, tokens, rt)
+    x, aux = forward(params, cfg, x, rt)
+    logits = unembed(params, cfg, x[:, :-1], rt)
+    labels = tokens[:, 1:]
+    mask = batch.get("mask")
+    mask = mask[:, 1:] if mask is not None else None
+    return layers.cross_entropy_loss(logits, labels, mask) + aux
+
+
+def prefill(params: PyTree, cfg: ModelConfig, tokens: Array, rt: Runtime
+            ) -> Tuple[Array, Dict[str, Array]]:
+    """Full forward that also materializes the KV cache.
+    Returns (last-position logits (B,V), cache {k,v: (L,B,S,Hkv,D)})."""
+
+    def body(carry, lp):
+        h = layers.rms_norm(carry, lp["attn_norm"]["scale"], cfg.norm_eps)
+        positions = jnp.arange(carry.shape[1])[None, :]
+        q, k, v = attention._project_qkv(lp["attn"], cfg, h, positions)
+        if rt.attn_impl == "chunked":
+            o = attention._sdpa_chunked(q, k, v, causal=True)
+        else:
+            o = attention._sdpa(q, k, v, causal=True)
+        a = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        x = carry + a
+        hh = layers.rms_norm(x, lp["ffn_norm"]["scale"], cfg.norm_eps)
+        y, _ = _ffn(lp, cfg, hh, rt)
+        return x + y, (k, v)
+
+    body = rt.checkpoint(body)
+    x = embed(params, cfg, tokens, rt)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    logits = unembed(params, cfg, x[:, -1:], rt)[:, 0]
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(params: PyTree, cfg: ModelConfig, cache: Dict[str, Array],
+                tokens: Array, position: Array, rt: Runtime
+                ) -> Tuple[Array, Dict[str, Array]]:
+    """One decode step.  tokens: (B, 1) int32; position: scalar int32;
+    cache arrays (L, B, S_max, Hkv, D), donated by the caller."""
+    x = embed(params, cfg, tokens, rt)
+
+    def body(carry, xs):
+        lp, kc, vc = xs
+        h, kc, vc = decode_block(lp, cfg, carry, kc, vc, position, rt)
+        return h, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"],
+                                         cache["k"], cache["v"]))
+    logits = unembed(params, cfg, x, rt)[:, 0]
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,95 @@
+"""InternVL2-style VLM: stubbed vision frontend + InternLM2 LM backbone.
+
+Per the assignment the modality frontend is a STUB: ``input_specs``
+provides precomputed InternViT patch embeddings (B, n_patches, vision_dim);
+here they pass through the 2-layer MLP projector into the LM embedding
+space and are prepended to the text embeddings.  Loss is computed on text
+positions only.  Decode reuses the plain decoder-only path (the image
+tokens live in the prompt/KV cache).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamSpec
+from repro.models.runtime import Runtime
+
+Array = Any
+PyTree = Any
+
+
+def vlm_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs = transformer.lm_specs(cfg)
+    v = cfg.vlm
+    specs["projector"] = {
+        "norm": layers.norm_specs(v.vision_dim),
+        "w1": ParamSpec((v.vision_dim, cfg.d_model), (None, "fsdp_embed")),
+        "w2": ParamSpec((cfg.d_model, cfg.d_model),
+                        (None, "fsdp_embed")),
+    }
+    return specs
+
+
+def project_patches(params: PyTree, cfg: ModelConfig, patches: Array
+                    ) -> Array:
+    p = params["projector"]
+    x = layers.rms_norm(patches.astype(layers.DEFAULT_DTYPE),
+                        p["norm"]["scale"], cfg.norm_eps)
+    x = jnp.einsum("bpd,de->bpe", x, p["w1"])
+    x = jax.nn.gelu(x.astype(jnp.float32)).astype(layers.DEFAULT_DTYPE)
+    return jnp.einsum("bpd,de->bpe", x, p["w2"])
+
+
+def vlm_loss(params: PyTree, cfg: ModelConfig, batch: Dict[str, Array],
+             rt: Runtime) -> Array:
+    """batch: patches (B, P, vision_dim), tokens (B, S_text).
+    The combined sequence is [patches; text]; CE on text positions."""
+    patches, tokens = batch["patches"], batch["tokens"]
+    vis = project_patches(params, cfg, patches)
+    txt = transformer.embed(params, cfg, tokens, rt)
+    x = jnp.concatenate([vis, txt], axis=1)
+    x = rt.constrain(x, "batch", "seq", None)
+    x, aux = transformer.forward(params, cfg, x, rt)
+    n_p = patches.shape[1]
+    # predict text token t+1 from position n_p + t - 1
+    x_text = x[:, n_p - 1:-1]
+    logits = transformer.unembed(params, cfg, x_text, rt)
+    mask = batch.get("mask")
+    return layers.cross_entropy_loss(logits, tokens, mask) + aux
+
+
+def prefill(params: PyTree, cfg: ModelConfig, batch: Dict[str, Array],
+            rt: Runtime) -> Tuple[Array, Dict[str, Array]]:
+    """Multimodal prefill: embeds [patches; text] and fills the KV cache."""
+    vis = project_patches(params, cfg, batch["patches"])
+    txt = transformer.embed(params, cfg, batch["tokens"], rt)
+    x = jnp.concatenate([vis, txt], axis=1)
+
+    def body(carry, lp):
+        from repro.models import attention
+        h = layers.rms_norm(carry, lp["attn_norm"]["scale"], cfg.norm_eps)
+        positions = jnp.arange(carry.shape[1])[None, :]
+        q, k, v = attention._project_qkv(lp["attn"], cfg, h, positions)
+        if rt.attn_impl == "chunked":
+            o = attention._sdpa_chunked(q, k, v, causal=True)
+        else:
+            o = attention._sdpa(q, k, v, causal=True)
+        carry = carry + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        h = layers.rms_norm(carry, lp["ffn_norm"]["scale"], cfg.norm_eps)
+        y, _ = transformer._ffn(lp, cfg, h, rt)
+        return carry + y, (k, v)
+
+    body = rt.checkpoint(body)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    logits = transformer.unembed(params, cfg, x[:, -1:], rt)[:, 0]
+    return logits, {"k": ks, "v": vs}
+
+
+# decode: identical to the plain LM decoder (image tokens are in the cache)
+decode_step = transformer.decode_step

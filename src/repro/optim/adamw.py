@@ -1,0 +1,102 @@
+"""AdamW with fp32 master weights, cosine schedule and global-norm clip.
+
+Pure JAX (no optax in this environment).  State layout per parameter:
+fp32 master + fp32 m + fp32 v — this is what makes the dry-run's
+memory_analysis the *real* training-memory picture (bf16 params + 12
+bytes/param of optimizer state, sharded like the parameters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init(params: PyTree) -> Dict[str, Any]:
+    f32 = lambda p: p.astype(jnp.float32)  # noqa: E731
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def abstract_state(abstract_params: PyTree) -> Dict[str, Any]:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)  # noqa: E731
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "master": jax.tree.map(f32, abstract_params),
+        "m": jax.tree.map(f32, abstract_params),
+        "v": jax.tree.map(f32, abstract_params),
+    }
+
+
+def global_norm(tree: PyTree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def update(cfg: OptConfig, grads: PyTree, state: Dict[str, Any],
+           param_dtype=jnp.bfloat16) -> Tuple[PyTree, Dict[str, Any], Dict]:
+    """Returns (new_params (cast to param_dtype), new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * p)
+        return m, v, p
+
+    flat_g = jax.tree.leaves(grads)
+    tdef = jax.tree.structure(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_p = jax.tree.leaves(state["master"])
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda p: p.astype(param_dtype), new_master)
+    new_state = {"step": step, "master": new_master, "m": new_m,
+                 "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

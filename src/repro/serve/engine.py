@@ -1,0 +1,158 @@
+"""Batched serving engine with continuous batching and round-robin
+delivery (the paper's protocol shape, applied to inference).
+
+Mapping (DESIGN.md): requests are messages; the decode loop is the
+predicate sweep — every iteration it *opportunistically batches* whatever
+is ready (admits new requests into free KV-cache slots = SMC ring slots,
+decodes every active slot in one fused step); a slot is freed only after
+its response is delivered (slot-reuse rule).  A request that stalls
+(client backpressure) occupies its slot but decodes a null step — the
+batch round never waits (null-round analogue).
+
+Single-host reference implementation; the decode step itself is the same
+``make_serve_step`` the multi-pod dry-run lowers, so the engine scales to
+the production mesh by construction.
+
+Scope note: the slot ring assumes position-addressed decode state (KV
+caches — dense/moe/vlm/encdec families), where an idle slot's garbage
+write is harmlessly overwritten at its own position.  Recurrent families
+(ssm/hybrid) mutate state on every step and would need a validity-masked
+state update (the null-round mask of repro.core.gradsync, applied to
+decode) — documented future work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers, registry
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.runtime import Runtime
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S_prompt,) int32
+    max_new_tokens: int = 16
+    submitted_at: float = 0.0
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+    finished_at: Optional[float] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8                  # KV slots (the ring window w)
+    max_len: int = 256
+    eos_id: Optional[int] = None
+    greedy: bool = True
+
+
+class ServeEngine:
+    """Continuous-batching decode engine over a fixed slot ring."""
+
+    def __init__(self, arch_name: str, params, cfg: ModelConfig,
+                 ecfg: EngineConfig, rt: Runtime = Runtime()):
+        self.arch = registry.get(arch_name)
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.rt = rt
+        self.params = params
+        b, s = ecfg.max_batch, ecfg.max_len
+        shape = ShapeConfig("engine", s, b, "decode")
+        cache_specs = registry.cache_specs(cfg, shape, batch_override=b)
+        self.cache = jax.tree.map(
+            lambda sp: jnp.zeros(sp.shape, sp.dtype), cache_specs,
+            is_leaf=lambda x: isinstance(x, layers.ParamSpec))
+        self.decode = jax.jit(
+            lambda p, c, t, pos: self.arch.decode_fn()(p, cfg, c, t, pos,
+                                                       rt),
+            donate_argnums=(1,))
+        # slot state (the SMC ring of the serving plane)
+        self.slot_req: List[Optional[Request]] = [None] * b
+        self.slot_len = np.zeros(b, dtype=np.int64)
+        self.queue: deque = deque()
+        self.completed: List[Request] = []
+        self.rounds = 0
+        self.decode_steps = 0
+
+    # -- request plane -------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.submitted_at = req.submitted_at or time.time()
+        self.queue.append(req)
+
+    def _admit(self):
+        """Opportunistic admission: fill every free slot that has a ready
+        request (never waits to accumulate a batch)."""
+        for slot in range(self.ecfg.max_batch):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self._prefill_slot(slot, req)
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Sequential prefill through the decode path (single-host
+        reference: correctness over speed; the dry-run's prefill step is
+        the production path)."""
+        self.slot_req[slot] = req
+        self.slot_len[slot] = 0
+        b = self.ecfg.max_batch
+        for tok in req.prompt:
+            tokens = np.zeros((b, 1), dtype=np.int32)
+            tokens[slot, 0] = int(tok)
+            pos = jnp.asarray(self.slot_len, jnp.int32)
+            logits, self.cache = self.decode(self.params, self.cache,
+                                             jnp.asarray(tokens), pos)
+            self.slot_len[slot] += 1
+            self.decode_steps += 1
+
+    # -- the decode sweep ------------------------------------------------------
+
+    def step(self):
+        """One engine round: admit ready work, decode every active slot."""
+        self.rounds += 1
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        b = self.ecfg.max_batch
+        tokens = np.zeros((b, 1), dtype=np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            last = req.tokens_out[-1] if req.tokens_out else \
+                int(req.prompt[-1])
+            tokens[i, 0] = last
+        # one fused decode for the whole ring with per-slot positions
+        pos = jnp.asarray(self.slot_len, jnp.int32)
+        logits, self.cache = self.decode(self.params, self.cache,
+                                         jnp.asarray(tokens), pos)
+        self.decode_steps += 1
+        logits = np.asarray(logits.astype(jnp.float32))
+        for i in active:
+            req = self.slot_req[i]
+            nxt = int(np.argmax(logits[i]))
+            req.tokens_out.append(nxt)
+            self.slot_len[i] += 1
+            done = (len(req.tokens_out) >= req.max_new_tokens
+                    or (self.ecfg.eos_id is not None
+                        and nxt == self.ecfg.eos_id)
+                    or self.slot_len[i] >= self.ecfg.max_len - 1)
+            if done:
+                req.finished_at = time.time()
+                self.completed.append(req)
+                self.slot_req[i] = None    # slot delivered -> reusable
+                self.slot_len[i] = 0
+        return True
+
+    def run_until_drained(self, max_rounds: int = 10_000):
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and self.rounds < max_rounds:
+            self.step()
+        return self.completed

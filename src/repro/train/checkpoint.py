@@ -1,0 +1,163 @@
+"""Sharding-aware atomic checkpointer with restart/elastic-restore.
+
+Layout (no tensorstore in this environment — plain npz shards):
+
+    <dir>/step_000123/
+        manifest.json        # step, leaf paths, shapes, dtypes, view id
+        shard_00000.npz      # flat {leaf_path: array} chunks
+        ...
+    <dir>/LATEST             # atomic pointer (rename-into-place)
+
+Guarantees:
+  * atomic: a checkpoint directory is staged under a temp name and
+    renamed into place; LATEST is updated last — a crash mid-save never
+    corrupts the restore path (the previous checkpoint stays valid);
+  * monotone: LATEST only ever advances (the delivered_step watermark of
+    the virtual-synchrony adaptation — see DESIGN.md);
+  * elastic: restore() only needs the manifest to rebuild any sharding —
+    arrays are saved unsharded-logical (gathered), so a new view with a
+    different mesh/rank-count can load them under new shardings.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SHARD_BYTES = 512 << 20
+
+
+def _flatten(tree: PyTree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str | Path, step: int, tree: PyTree,
+         extra: Optional[Dict[str, Any]] = None) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    final = directory / f"step_{step:09d}"
+    if final.exists():
+        return final  # idempotent (restart re-saves the same watermark)
+    stage = Path(tempfile.mkdtemp(dir=directory, prefix=".stage_"))
+    manifest = {"step": step, "leaves": {}, "shards": [],
+                "extra": extra or {}}
+    shard: Dict[str, np.ndarray] = {}
+    shard_bytes = 0
+    shard_id = 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_id
+        if not shard:
+            return
+        name = f"shard_{shard_id:05d}.npz"
+        np.savez(stage / name, **shard)
+        manifest["shards"].append(name)
+        shard, shard_bytes = {}, 0
+        shard_id += 1
+
+    for key, leaf in sorted(flat.items()):
+        arr = np.asarray(jax.device_get(leaf))
+        true_dtype = str(arr.dtype)
+        if arr.dtype.kind not in "biufc":   # ml_dtypes (bf16, fp8, ...)
+            arr = np.ascontiguousarray(arr).view(
+                f"u{arr.dtype.itemsize}")
+        manifest["leaves"][key] = {"shard": shard_id,
+                                   "dtype": true_dtype,
+                                   "shape": list(arr.shape)}
+        shard[key] = arr
+        shard_bytes += arr.nbytes
+        if shard_bytes >= _SHARD_BYTES:
+            flush()
+    flush()
+    (stage / "manifest.json").write_text(json.dumps(manifest))
+    os.replace(stage, final)                       # atomic publish
+    tmp_latest = directory / ".LATEST.tmp"
+    tmp_latest.write_text(final.name)
+    os.replace(tmp_latest, directory / "LATEST")   # atomic pointer bump
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    pointer = Path(directory) / "LATEST"
+    if not pointer.exists():
+        return None
+    name = pointer.read_text().strip()
+    if not (Path(directory) / name / "manifest.json").exists():
+        return None
+    return int(name.split("_")[-1])
+
+
+def restore(directory: str | Path, like: PyTree,
+            step: Optional[int] = None,
+            shardings: Optional[PyTree] = None
+            ) -> Tuple[int, PyTree, Dict[str, Any]]:
+    """Restore into the structure of `like` (arrays or ShapeDtypeStructs).
+    With `shardings`, leaves are device_put under the NEW mesh — this is
+    the elastic-restore path after a view change."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    ckpt = directory / f"step_{step:09d}"
+    manifest = json.loads((ckpt / "manifest.json").read_text())
+    import ml_dtypes
+    arrays: Dict[str, np.ndarray] = {}
+    for name in manifest["shards"]:
+        with np.load(ckpt / name) as z:
+            for k in z.files:
+                arr = z[k]
+                true_dtype = manifest["leaves"][k]["dtype"]
+                if str(arr.dtype) != true_dtype:
+                    arr = arr.view(np.dtype(
+                        getattr(ml_dtypes, true_dtype)))
+                arrays[k] = arr
+    flat_like = _flatten(like)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    leaves_out = {}
+    for key, ref in flat_like.items():
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        want_shape = tuple(ref.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {want_shape}")
+        if key in flat_shard:
+            leaves_out[key] = jax.device_put(arr, flat_shard[key])
+        else:
+            leaves_out[key] = jax.numpy.asarray(arr, dtype=ref.dtype)
+    # rebuild tree in like's structure
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for path, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        ordered.append(leaves_out[key])
+    return step, jax.tree_util.tree_unflatten(treedef, ordered), \
+        manifest.get("extra", {})
+
+
+def prune(directory: str | Path, keep: int = 3):
+    """Keep the newest `keep` checkpoints (never the LATEST target)."""
+    directory = Path(directory)
+    latest = latest_step(directory)
+    steps = sorted(int(p.name.split("_")[-1])
+                   for p in directory.glob("step_*") if p.is_dir())
+    for s in steps[:-keep] if len(steps) > keep else []:
+        if s != latest:
+            shutil.rmtree(directory / f"step_{s:09d}", ignore_errors=True)

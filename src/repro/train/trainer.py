@@ -1,0 +1,142 @@
+"""The training loop: checkpoint/restart, elastic view changes, straggler
+null-rounds, Spindle gradient multicast — the full runtime.
+
+Single-process reference that is faithful to the multi-host control flow:
+the same train_step the dry-run lowers for 512 chips runs here on the
+local device(s); the elastic runtime (repro.train.elastic) drives view
+changes; the checkpointer publishes the delivered_step watermark the next
+view restores from.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gradsync import SyncState
+from repro.data import pipeline
+from repro.models import layers, registry
+from repro.models.config import ModelConfig
+from repro.models.runtime import Runtime
+from repro.optim import adamw
+from repro.train import checkpoint
+from repro.train.steps import make_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    seed: int = 0
+    data_patterns: int = 512     # synthetic-stream difficulty
+    opt: adamw.OptConfig = dataclasses.field(default_factory=adamw.OptConfig)
+
+
+class Trainer:
+    def __init__(self, arch_name: str, cfg: ModelConfig, tcfg: TrainConfig,
+                 rt: Runtime = Runtime()):
+        self.arch = registry.get(arch_name)
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.rt = rt
+        self.data_cfg = pipeline.DataConfig(
+            seq_len=tcfg.seq_len, global_batch=tcfg.global_batch,
+            vocab_size=cfg.vocab_size, seed=tcfg.seed,
+            n_patterns=tcfg.data_patterns)
+        self.loader = pipeline.ShardedLoader(self.data_cfg, rank=0,
+                                             n_ranks=1)
+        self.sync = SyncState()
+        self.history: List[Dict[str, float]] = []
+
+        step_fn = make_train_step(self.arch, rt, tcfg.opt)
+        self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # -- state ----------------------------------------------------------------
+
+    def init_state(self, key=None):
+        key = key if key is not None else jax.random.key(self.tcfg.seed)
+        specs = registry.param_specs(self.cfg)
+        params = layers.init_tree(specs, key)
+        opt_state = adamw.init(params)
+        return params, opt_state
+
+    def maybe_restore(self, params, opt_state):
+        d = self.tcfg.checkpoint_dir
+        if not d or checkpoint.latest_step(d) is None:
+            return 0, params, opt_state
+        step, tree, extra = checkpoint.restore(
+            d, {"params": params, "opt": opt_state})
+        self.sync = SyncState(delivered_step=step, sent_step=step)
+        return step, tree["params"], tree["opt"]
+
+    # -- the loop --------------------------------------------------------------
+
+    def _batch_for(self, step: int) -> Dict[str, jnp.ndarray]:
+        raw = self.loader.batch(step)
+        batch = {"tokens": jnp.asarray(raw["tokens"])}
+        if self.cfg.family == "encdec":
+            toks = batch["tokens"]
+            half = toks.shape[1] // 2
+            # stub frontend: frame embeddings derived deterministically
+            frames = jax.nn.one_hot(toks[:, :half] % self.cfg.d_model,
+                                    self.cfg.d_model,
+                                    dtype=jnp.bfloat16)
+            batch = {"frames": frames, "tokens": toks[:, half:]}
+        elif self.cfg.family == "vlm":
+            toks = batch["tokens"]
+            n_p = self.cfg.vlm.n_patches
+            patches = jax.nn.one_hot(
+                toks[:, :n_p] % self.cfg.vlm.vision_dim,
+                self.cfg.vlm.vision_dim, dtype=jnp.bfloat16)
+            batch = {"patches": patches, "tokens": toks[:, n_p:]}
+        return batch
+
+    def run(self, params=None, opt_state=None,
+            on_step: Optional[Callable[[int, Dict], None]] = None):
+        if params is None:
+            params, opt_state = self.init_state()
+        start, params, opt_state = self.maybe_restore(params, opt_state)
+        t0 = time.time()
+        for step in range(start, self.tcfg.steps):
+            batch = self._batch_for(step)
+            params, opt_state, metrics = self._step(params, opt_state,
+                                                    batch)
+            self.sync = self.sync.advance()
+            if (step + 1) % self.tcfg.log_every == 0 or \
+                    step == self.tcfg.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step + 1
+                m["wall_s"] = time.time() - t0
+                self.history.append(m)
+                print(f"step {step+1:5d} loss {m['loss']:.4f} "
+                      f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e}",
+                      flush=True)
+            if self.tcfg.checkpoint_dir and \
+                    (step + 1) % self.tcfg.checkpoint_every == 0:
+                self._save(step + 1, params, opt_state)
+            if on_step:
+                on_step(step, metrics)
+        if self.tcfg.checkpoint_dir:
+            self._save(self.tcfg.steps, params, opt_state)
+        return params, opt_state
+
+    def _save(self, step: int, params, opt_state):
+        checkpoint.save(self.tcfg.checkpoint_dir, step,
+                        {"params": params, "opt": opt_state},
+                        extra={"arch": self.cfg.name})
+        self.sync = self.sync.deliver(step)
+        checkpoint.prune(self.tcfg.checkpoint_dir,
+                         self.tcfg.keep_checkpoints)

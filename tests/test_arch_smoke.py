@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests: a REDUCED config of each family runs one
+train step (loss finite, grads finite) and one decode step (shapes right,
+no NaNs) on CPU.  Full configs are only ever lowered via the dry-run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers, registry
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.runtime import CPU_RUNTIME as RT
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = list(registry.names())
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+DECODE_SHAPE = ShapeConfig("smoke_dec", seq_len=32, global_batch=2,
+                           kind="decode")
+
+
+def _batch_for(cfg: ModelConfig, key) -> dict:
+    b, s = SMOKE_SHAPE.global_batch, SMOKE_SHAPE.seq_len
+    k1, k2 = jax.random.split(key)
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.random.normal(k1, (b, s // 2, cfg.d_model),
+                                        jnp.float32).astype(jnp.bfloat16),
+            "tokens": jax.random.randint(k2, (b, s // 2), 0,
+                                         cfg.vocab_size),
+        }
+    if cfg.family == "vlm":
+        n_p = cfg.vlm.n_patches
+        return {
+            "patches": jax.random.normal(
+                k1, (b, n_p, cfg.vlm.vision_dim),
+                jnp.float32).astype(jnp.bfloat16),
+            "tokens": jax.random.randint(k2, (b, s - n_p), 0,
+                                         cfg.vocab_size),
+        }
+    return {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size)}
+
+
+@pytest.fixture(scope="module")
+def reduced(request):
+    return {}
+
+
+def _init(cfg):
+    specs = registry.param_specs(cfg)
+    return layers.init_tree(specs, jax.random.key(0))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step_smoke(name):
+    arch = registry.get(name)
+    cfg = arch.cfg.reduced()
+    params = _init(cfg)
+    batch = _batch_for(cfg, jax.random.key(1))
+    loss_fn = arch.loss_fn()
+
+    @jax.jit
+    def step(p, b):
+        loss, grads = jax.value_and_grad(
+            lambda pp: loss_fn(pp, cfg, b, RT))(p)
+        return loss, grads
+
+    loss, grads = step(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{name}: non-finite loss"
+    # a sensible CE magnitude for random init: ~log(vocab)
+    assert 0.1 < float(loss) < 3 * np.log(cfg.vocab_size) + 5
+    finite = jax.tree.map(lambda g: bool(jnp.all(jnp.isfinite(
+        g.astype(jnp.float32)))), grads)
+    assert all(jax.tree.leaves(finite)), f"{name}: non-finite grads"
+    nonzero = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                  for g in jax.tree.leaves(grads))
+    assert nonzero > 0, f"{name}: all-zero grads"
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_decode_step_smoke(name):
+    arch = registry.get(name)
+    cfg = arch.cfg.reduced()
+    params = _init(cfg)
+    b = DECODE_SHAPE.global_batch
+    cache_specs = registry.cache_specs(cfg, DECODE_SHAPE, batch_override=b)
+    cache = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_specs,
+        is_leaf=lambda x: isinstance(x, layers.ParamSpec))
+    tokens = jax.random.randint(jax.random.key(3), (b, 1), 0,
+                                cfg.vocab_size)
+    decode = arch.decode_fn()
+    pos = jnp.int32(DECODE_SHAPE.seq_len - 1)
+
+    @jax.jit
+    def step(p, c, t):
+        return decode(p, cfg, c, t, pos, RT)
+
+    logits, new_cache = step(params, cache, tokens)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # cache structure is preserved (donation-compatible)
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+    for a, b_ in zip(jax.tree.leaves(new_cache), jax.tree.leaves(cache)):
+        assert a.shape == b_.shape and a.dtype == b_.dtype
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_input_specs_cover_shapes(name):
+    """Every non-skipped (arch x shape) cell has well-defined input specs."""
+    from repro.models.config import SHAPES
+    arch = registry.get(name)
+    for shape in SHAPES:
+        if arch.skip_reason(shape):
+            continue
+        specs = arch.input_specs(shape)
+        assert specs, (name, shape.name)
+        for k, v in specs.items():
+            assert all(d > 0 for d in v.shape), (name, shape.name, k)
+        if shape.is_decode:
+            cache = arch.cache_specs(shape)
+            assert jax.tree.leaves(cache), (name, shape.name)
+
+
+def test_decode_matches_prefill_dense():
+    """Decode with a prefilled cache reproduces full-forward logits."""
+    from repro.models import transformer as T
+    arch = registry.get("qwen3-1.7b")
+    cfg = arch.cfg.reduced()
+    params = _init(cfg)
+    tokens = jax.random.randint(jax.random.key(5), (2, 12), 0,
+                                cfg.vocab_size)
+    # full forward logits at the last position
+    x = T.embed(params, cfg, tokens, RT)
+    x, _ = T.forward(params, cfg, x, RT)
+    want = T.unembed(params, cfg, x[:, -1:], RT)[:, 0]
+    # prefill on the prefix, then decode the last token
+    logits_p, cache = T.prefill(params, cfg, tokens[:, :-1], RT)
+    pad = 4
+    cache = {k: jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+             for k, v in cache.items()}
+    got, _ = T.decode_step(params, cfg, cache, tokens[:, -1:],
+                           jnp.int32(11), RT)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=0.05, atol=0.05)

@@ -1,0 +1,265 @@
+"""Property + unit tests for the Spindle protocol core.
+
+These check the paper's stated invariants:
+  * round-robin sequence arithmetic is self-consistent (Sec. 2.1),
+  * the null-send rule implies no-stall / <=1-round skew / quiescence
+    (Sec. 3.3's proof, checked mechanically),
+  * monotone merge safety (Sec. 3.4's lock-release argument),
+  * the fused sweep delivers the same total order at every node.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import nullsend, smc, sst, sweep
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# sst: round-robin arithmetic
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(0, 200), min_size=1, max_size=16))
+def test_rr_prefix_definition(counts):
+    """rr_prefix(counts) = largest N s.t. every message of the first N in
+    round-robin order is present — checked against brute force."""
+    counts = np.array(counts)
+    s = len(counts)
+    n = 0
+    while counts[n % s] >= n // s + 1:
+        n += 1
+    assert sst.rr_prefix(counts) == n
+
+
+@given(st.integers(0, 10_000), st.integers(1, 16))
+def test_sender_counts_roundtrip(prefix, s):
+    counts = sst.sender_counts(np.array(prefix), s)
+    assert counts.sum() == prefix
+    # the counts of a complete prefix reproduce the prefix
+    assert sst.rr_prefix(counts) >= prefix
+
+
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=12))
+def test_rr_prefix_monotone(counts):
+    counts = np.array(counts)
+    bumped = counts + 1
+    assert sst.rr_prefix(bumped) >= sst.rr_prefix(counts)
+
+
+def test_rr_prefix_jnp_matches_np():
+    counts = np.array([[3, 5, 2], [7, 7, 7], [0, 9, 9]])
+    got = np.asarray(sst.rr_prefix(jnp.asarray(counts)))
+    want = np.array([sst.rr_prefix(c) for c in counts])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_update_own_row_rejects_non_monotonic():
+    schema = sst.SSTSchema(columns=(sst.SSTColumn("c", ()),))
+    table = schema.make_table(3)
+    table = sst.update_own_row(table, 0, "c", 5)
+    with pytest.raises(ValueError):
+        sst.update_own_row(table, 0, "c", 4)
+
+
+def test_merge_tables_is_monotone_join():
+    a = {"c": np.array([3, 1, 4])}
+    b = {"c": np.array([2, 7, 4])}
+    m = sst.merge_tables(a, b)
+    np.testing.assert_array_equal(m["c"], [3, 7, 4])
+    # idempotent + commutative
+    np.testing.assert_array_equal(
+        sst.merge_tables(m, a)["c"], m["c"])
+    np.testing.assert_array_equal(
+        sst.merge_tables(b, a)["c"], m["c"])
+
+
+# ---------------------------------------------------------------------------
+# smc: ring buffer
+# ---------------------------------------------------------------------------
+
+def test_smc_region_bytes_matches_paper_formula():
+    # Sec. 4.1.2: 16 members, 10KB messages, w=100 -> ~16MB per subgroup
+    cfg = smc.SMCConfig(window=100, max_msg_size=10240)
+    assert cfg.region_bytes(16) == 16 * 100 * (10240 + 8)
+    assert abs(cfg.region_bytes(16) / 2**20 - 16) < 0.7
+
+
+@given(st.integers(0, 1000), st.integers(1, 64))
+def test_slot_counter_identity(index, window):
+    # message k lives in slot k % w with counter k // w
+    slot = smc.slot_of(index, window)
+    ctr = smc.counter_for(index, window)
+    assert ctr * window + slot == index
+
+
+@given(st.integers(1, 8), st.integers(0, 40), st.integers(0, 80))
+def test_visible_from_counters(window, received, published):
+    published = max(received, min(published, received + window))
+    counters = np.full(window, -1, dtype=np.int64)
+    for k in range(published):
+        counters[k % window] = k // window
+    got = smc.visible_from_counters(counters, np.int64(received), window)
+    assert got == published
+
+
+# ---------------------------------------------------------------------------
+# nullsend: the Sec. 3.3 rule
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 7), st.integers(0, 100), st.integers(0, 100),
+       st.integers(0, 7))
+def test_null_target_is_minimal_non_preceding(i, l, k, j):
+    """target is the smallest own index that does not precede M(j, k)."""
+    tgt = int(nullsend.null_target(i, k, j))
+    assert not nullsend.precedes(tgt, i, k, j)
+    if tgt > 0:
+        assert nullsend.precedes(tgt - 1, i, k, j)
+    del l
+
+
+@given(st.integers(2, 8), st.data())
+def test_nulls_needed_never_responds_to_self(s, data):
+    rank = data.draw(st.integers(0, s - 1))
+    counts = np.zeros(s, dtype=np.int64)
+    counts[rank] = data.draw(st.integers(0, 50))
+    assert nullsend.nulls_needed(rank, 0, counts) == 0
+
+
+@given(st.integers(2, 8), st.data())
+def test_nulls_needed_covers_delivery(s, data):
+    """After sending the prescribed nulls, every message received so far is
+    deliverable once others catch up: our next message no longer precedes
+    any received message."""
+    rank = data.draw(st.integers(0, s - 1))
+    counts = np.array([data.draw(st.integers(0, 30)) for _ in range(s)])
+    own_next = data.draw(st.integers(0, 30))
+    n = int(nullsend.nulls_needed(rank, own_next, counts))
+    new_next = own_next + n
+    for j in range(s):
+        if j == rank or counts[j] == 0:
+            continue
+        assert not nullsend.precedes(new_next, rank, counts[j] - 1, j)
+    # and it is minimal: one fewer null would leave a preceding message
+    if n > 0:
+        assert any(
+            nullsend.precedes(new_next - 1, rank, counts[j] - 1, j)
+            for j in range(s) if j != rank and counts[j] > 0)
+
+
+def test_nulls_needed_quiescent_when_caught_up():
+    counts = np.array([10, 10, 10, 10])
+    assert nullsend.nulls_needed(0, 10, counts) == 0
+    # rank 3 at index 9 does not precede anyone's round-9 message...
+    assert nullsend.nulls_needed(3, 9, counts) == 0
+    # ...but at index 8 it precedes M(0..2, 9): one null
+    assert nullsend.nulls_needed(3, 8, counts) == 1
+    # rank 0 must cover round 9 itself (M(0,9) precedes M(1,9))
+    assert nullsend.nulls_needed(0, 9, counts) == 1
+
+
+# ---------------------------------------------------------------------------
+# sweep: fused protocol round — the paper's four properties
+# ---------------------------------------------------------------------------
+
+_PAD_ROUNDS = 72  # fixed scan length => one compile per (n_members, n_senders)
+
+
+def _run(n_members, n_senders, schedule, null_send=True, window=1 << 30):
+    schedule = np.asarray(schedule)
+    assert schedule.shape[0] <= _PAD_ROUNDS
+    padded = np.zeros((_PAD_ROUNDS, schedule.shape[1]), np.int64)
+    padded[: schedule.shape[0]] = schedule
+    stt = sweep.SweepState.init(n_members, n_senders)
+    return sweep.run_rounds(stt, jnp.asarray(padded, jnp.int32),
+                            null_send=null_send, window=window)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(2, 5), st.data())
+def test_sweep_no_stall_with_nulls(n_senders, data):
+    """Correctness (property 3): whatever the sending pattern, with nulls
+    every published app message is eventually delivered."""
+    n_members = n_senders + data.draw(st.integers(0, 2))
+    rounds = data.draw(st.integers(5, 25))
+    sched = np.array([[data.draw(st.integers(0, 2))
+                       for _ in range(n_senders)] for _ in range(rounds)])
+    # settle: enough empty rounds for visibility + nulls to drain
+    settle = np.zeros((rounds + 2 * n_members + 6, n_senders), np.int64)
+    st_final, _ = _run(n_members, n_senders, np.vstack([sched, settle]))
+    total = int(st_final.published.sum())
+    # every published message (app + null) is delivered at every node
+    assert np.all(np.asarray(st_final.delivered_num) == total - 1)
+    assert int(st_final.app_sent.sum()) == sched.sum()
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(2, 5), st.data())
+def test_sweep_quiescence(n_senders, data):
+    """Property 4: once the app stops, nulls stop too."""
+    n_members = n_senders
+    rounds = data.draw(st.integers(3, 15))
+    sched = np.array([[data.draw(st.integers(0, 2))
+                       for _ in range(n_senders)] for _ in range(rounds)])
+    settle = np.zeros((rounds + 2 * n_members + 6, n_senders), np.int64)
+    st1, _ = _run(n_members, n_senders, np.vstack([sched, settle]))
+    before = int(st1.nulls_sent.sum())
+    st2, _ = _run_cont(st1, np.zeros((10, n_senders), np.int64))
+    assert int(st2.nulls_sent.sum()) == before
+
+
+def _run_cont(state, schedule):
+    return sweep.run_rounds(state, jnp.asarray(schedule, jnp.int32))
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(2, 5), st.data())
+def test_sweep_one_round_skew(n_senders, data):
+    """The proof sketch in Sec 3.3: null-sends keep every sender within one
+    round of the most advanced sender (after visibility settles)."""
+    rounds = data.draw(st.integers(3, 12))
+    sched = np.array([[data.draw(st.integers(0, 1))
+                       for _ in range(n_senders)] for _ in range(rounds)])
+    settle = np.zeros((rounds + 2 * n_senders + 6, n_senders), np.int64)
+    st_final, _ = _run(n_senders, n_senders, np.vstack([sched, settle]))
+    pub = np.asarray(st_final.published)
+    assert pub.max() - pub.min() <= 1
+
+
+def test_sweep_stalls_without_nulls():
+    """Round-robin delivery stalls behind an inactive sender when nulls are
+    disabled — the problem Fig. 2 illustrates."""
+    sched = np.zeros((20, 3), np.int64)
+    sched[:, 0] = 1
+    sched[:, 2] = 1           # sender 1 silent
+    st_final, _ = _run(3, 3, sched, null_send=False)
+    # nothing past the first round-robin gap can deliver
+    assert int(np.asarray(st_final.delivered_num).max()) <= 0
+    st_ok, _ = _run(3, 3, np.vstack([sched, np.zeros((14, 3), np.int64)]),
+                    null_send=True)
+    assert int(np.asarray(st_ok.delivered_num).min()) > 30
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(2, 4), st.integers(1, 4), st.data())
+def test_sweep_window_cap_respected(n_senders, window, data):
+    rounds = data.draw(st.integers(3, 20))
+    sched = np.array([[data.draw(st.integers(0, 3))
+                       for _ in range(n_senders)] for _ in range(rounds)])
+    stt = sweep.SweepState.init(n_senders, n_senders)
+    for r in range(rounds):
+        stt, _ = sweep.sweep(stt, jnp.asarray(sched[r], jnp.int32),
+                             window=window)
+        pub = np.asarray(stt.published)
+        # a sender never runs more than `window` past what it knows to be
+        # delivered everywhere
+        deliv = np.asarray(stt.deliv_vis).min(axis=1)[:n_senders]
+        per_sender = np.array(
+            [sst.sender_counts(d + 1, n_senders)[i]
+             for i, d in enumerate(deliv)])
+        assert np.all(pub - per_sender <= window)

@@ -1,0 +1,167 @@
+"""Gradient-multicast tests: bucket plans, fused == per-tensor semantics,
+null-round validity reduction, int8 compression with error feedback.
+
+Collective semantics are exercised with vmap axes (jax implements psum &
+friends over vmapped axes), so these run on one CPU device with a real
+"8-worker" axis.
+"""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import gradsync
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tree(key, shapes):
+    keys = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(keys, shapes))}
+
+
+SHAPES = [(17,), (8, 9), (3, 4, 5), (128,), (2, 2)]
+
+
+# ---------------------------------------------------------------------------
+# bucket plan
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 6), st.integers(64, 4096))
+def test_bucket_roundtrip(n_leaves, target):
+    tree = {f"w{i}": jnp.arange(i * 7 + 3, dtype=jnp.float32) + i
+            for i in range(n_leaves)}
+    plan = gradsync.make_plan(tree, target_bytes=target)
+    buckets = gradsync.flatten_buckets(tree, plan)
+    back = gradsync.unflatten_buckets(buckets, plan)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bucket_plan_respects_target():
+    tree = {f"w{i}": jnp.zeros((1024,)) for i in range(16)}  # 4KB each
+    plan = gradsync.make_plan(tree, target_bytes=8192)
+    assert plan.n_buckets == 8
+    for b in range(plan.n_buckets):
+        assert plan.bucket_bytes(b) <= 8192
+
+
+def test_bucket_order_is_deterministic():
+    tree = {"b": jnp.zeros((4,)), "a": jnp.zeros((4,)),
+            "c": {"x": jnp.zeros((4,))}}
+    p1 = gradsync.make_plan(tree)
+    p2 = gradsync.make_plan(tree)
+    assert p1.starts == p2.starts and p1.leaf_shapes == p2.leaf_shapes
+
+
+# ---------------------------------------------------------------------------
+# reductions over a vmapped worker axis
+# ---------------------------------------------------------------------------
+
+W = 8
+
+
+def _per_worker_grads(key):
+    keys = jax.random.split(key, W)
+    return jax.vmap(lambda k: _tree(k, SHAPES))(jnp.stack(keys))
+
+
+def test_fused_equals_per_tensor_equals_mean():
+    grads = _per_worker_grads(jax.random.key(0))
+    want = jax.tree.map(lambda g: g.mean(0), grads)
+
+    per_tensor = jax.vmap(
+        lambda g: gradsync.per_tensor_psum_mean(g, "w"), axis_name="w")(
+        grads)
+    plan = gradsync.make_plan(jax.tree.map(lambda g: g[0], grads),
+                              target_bytes=1024)
+    fused = jax.vmap(
+        lambda g: gradsync.fused_psum_mean(g, plan, "w"), axis_name="w")(
+        grads)
+    for a, b, c in zip(jax.tree.leaves(per_tensor),
+                       jax.tree.leaves(fused), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a[0]), np.asarray(c),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(b[0]), np.asarray(c),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_null_round_validity_mean():
+    grads = _per_worker_grads(jax.random.key(1))
+    valid = jnp.array([1, 1, 0, 1, 0, 1, 1, 1], jnp.float32)
+    out, count = jax.vmap(
+        lambda g, v: gradsync.psum_with_validity(g, v, "w"),
+        axis_name="w")(grads, valid)
+    assert float(count[0]) == 6.0
+    # mean over live contributors only — stragglers contribute nulls
+    for name in grads:
+        want = (grads[name] * valid.reshape(
+            (W,) + (1,) * (grads[name].ndim - 1))).sum(0) / 6.0
+        np.testing.assert_allclose(np.asarray(out[name][0]),
+                                   np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_null_round_all_invalid_is_safe():
+    grads = _per_worker_grads(jax.random.key(2))
+    valid = jnp.zeros((W,), jnp.float32)
+    out, count = jax.vmap(
+        lambda g, v: gradsync.psum_with_validity(g, v, "w"),
+        axis_name="w")(grads, valid)
+    assert float(count[0]) == 0.0
+    for leaf in jax.tree.leaves(out):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+        np.testing.assert_allclose(np.asarray(leaf), 0.0, atol=1e-6)
+
+
+def test_compressed_psum_close_and_error_feedback():
+    grads = _per_worker_grads(jax.random.key(3))
+    want = jax.tree.map(lambda g: g.mean(0).astype(jnp.float32), grads)
+    plan = gradsync.make_plan(jax.tree.map(lambda g: g[0], grads),
+                              target_bytes=1 << 20)
+    state = gradsync.CompressionState.init(plan)
+    state_b = jax.tree.map(
+        lambda r: jnp.broadcast_to(r, (W,) + r.shape), state.residuals)
+
+    def step(g, res):
+        st = gradsync.CompressionState(residuals=list(res))
+        out, new_state = gradsync.compressed_psum_mean(
+            g, plan, st, "w", jax.lax.axis_index("w"))
+        return out, tuple(new_state.residuals)
+
+    out, new_res = jax.vmap(step, axis_name="w")(grads, tuple(state_b))
+    # int8 quantization error is bounded by scale/2 per element
+    for name in want:
+        got = np.asarray(out[name][0])
+        ref = np.asarray(want[name])
+        scale = np.abs(ref).max() / 127.0 + 1e-12
+        assert np.max(np.abs(got - ref)) < 4 * scale + 1e-4
+    # error feedback: residuals hold exactly what quantization lost
+    assert any(float(jnp.abs(r).max()) > 0 for r in new_res)
+
+    # applying the residual next step cancels the bias:
+    # two steps with the same grads average closer than one step
+    out2, _ = jax.vmap(step, axis_name="w")(grads, new_res)
+    for name in want:
+        ref = np.asarray(want[name])
+        one = np.asarray(out[name][0])
+        two = (np.asarray(out[name][0]) + np.asarray(out2[name][0])) / 2
+        assert np.abs(two - ref).mean() <= np.abs(one - ref).mean() + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# SyncState watermarks
+# ---------------------------------------------------------------------------
+
+def test_sync_state_monotone():
+    s = gradsync.SyncState()
+    s = s.advance().advance(null=True).deliver(1)
+    assert s.sent_step == 2 and s.null_rounds == 1
+    assert s.delivered_step == 1
+    with pytest.raises(ValueError):
+        s.deliver(0)

@@ -1,0 +1,127 @@
+"""MoE dispatch/properties: capacity, first-choice priority, weight
+normalization, drop semantics, and expert-parallel slice equivalence."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.models import layers, moe
+from repro.models.config import ModelConfig, MoEConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(n_routed=8, top_k=2, n_shared=0, cap=1.25, pad=None):
+    return ModelConfig(
+        name="m", family="moe", n_layers=1, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=0, vocab_size=64, head_dim=16,
+        moe=MoEConfig(n_routed=n_routed, top_k=top_k, n_shared=n_shared,
+                      d_ff_expert=16, capacity_factor=cap, ep_pad_to=pad))
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(4, 64), st.integers(2, 8), st.integers(1, 3))
+def test_dispatch_tables_capacity_and_validity(t, e, k):
+    k = min(k, e)
+    key = jax.random.key(t * 131 + e)
+    # distinct experts per token, like a real top_k
+    scores = jax.random.normal(key, (t, e))
+    idx = jnp.argsort(-scores, axis=-1)[:, :k]
+    w = jax.nn.softmax(jax.random.normal(key, (t, k)), axis=-1)
+    cap = max(2, t * k // e)
+    tok, wt, valid = moe.dispatch_tables(idx, w, e, cap, t)
+    tok, wt, valid = map(np.asarray, (tok, wt, valid))
+    # every valid slot points at a real token; invalid slots are OOB
+    assert tok.shape == (e, cap)
+    assert np.all(tok[valid] < t) and np.all(tok[valid] >= 0)
+    assert np.all(tok[~valid] == t)
+    assert np.all(wt[~valid] == 0)
+    # no expert exceeds capacity and no (token, expert) pair duplicates
+    for ei in range(e):
+        toks = tok[ei][valid[ei]]
+        assert len(set(toks.tolist())) == len(toks)
+
+
+def test_dispatch_first_choice_priority():
+    """When an expert is oversubscribed, first-choice (k=0) assignments
+    win slots before second choices."""
+    t, e, cap = 6, 2, 3
+    # tokens 0..2 first-choice expert 0; tokens 3..5 second-choice expert 0
+    idx = jnp.array([[0, 1]] * 3 + [[1, 0]] * 3)
+    w = jnp.full((t, 2), 0.5)
+    tok, wt, valid = moe.dispatch_tables(idx, w, e, cap, t)
+    slot_tokens = set(np.asarray(tok)[0][np.asarray(valid)[0]].tolist())
+    assert slot_tokens == {0, 1, 2}   # first choices took every slot
+
+
+def test_route_weights_normalized():
+    cfg = _cfg()
+    p = layers.init_tree(moe.moe_specs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (16, 32))
+    idx, w, aux = moe.route(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert np.asarray(idx).max() < cfg.moe.n_routed
+    assert float(aux) >= 0.0
+
+
+def test_moe_block_output_finite_and_shaped():
+    cfg = _cfg(n_shared=2)
+    p = layers.init_tree(moe.moe_specs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 8, 32)).astype(
+        jnp.bfloat16)
+    y, aux = moe.moe_block(p, cfg, x, ep_axis=None)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+
+
+def test_ep_slices_sum_to_whole():
+    """Running each expert-parallel rank's slice locally and psumming
+    (here: adding) equals the single-rank computation — the EP invariant
+    the shard_map path relies on."""
+    cfg = _cfg(n_routed=8, top_k=2)
+    p = layers.init_tree(moe.moe_specs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (24, 32)).astype(jnp.float32)
+
+    whole, aux_w = moe._moe_ffn_sharded(p, cfg, x, jnp.int32(0), 1)
+
+    ep = 4
+    e_local = 8 // ep
+    partial_sum = jnp.zeros_like(whole)
+    for r in range(ep):
+        p_slice = dict(p)
+        for kname in ("w_gate", "w_up", "w_down"):
+            p_slice[kname] = p[kname][r * e_local:(r + 1) * e_local]
+        part, aux_r = moe._moe_ffn_sharded(p_slice, cfg, x,
+                                           jnp.int32(r), ep)
+        partial_sum = partial_sum + part
+        np.testing.assert_allclose(float(aux_r), float(aux_w), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(partial_sum),
+                               np.asarray(whole), rtol=2e-3, atol=2e-3)
+
+
+def test_ep_padding_never_routes():
+    """qwen2-moe pads 60 experts to 64 EP slots; the router must never
+    select a pad slot."""
+    cfg = _cfg(n_routed=6, top_k=2, pad=8)
+    p = layers.init_tree(moe.moe_specs(cfg), jax.random.key(0))
+    assert p["w_gate"].shape[0] == 8          # padded expert bank
+    x = jax.random.normal(jax.random.key(1), (64, 32))
+    idx, w, _ = moe.route(p, cfg, x)
+    assert int(jnp.max(idx)) < 6              # router logits only cover 6
+
+
+def test_dropped_tokens_contribute_zero():
+    """With capacity factor << 1 most tokens drop; output stays finite and
+    dropped tokens' outputs are exactly zero."""
+    cfg = _cfg(n_routed=2, top_k=1, cap=0.1)
+    p = layers.init_tree(moe.moe_specs(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (64, 32)).astype(jnp.float32)
+    y, _ = moe._moe_ffn_sharded(p, cfg, x, jnp.int32(0), 1)
+    y = np.asarray(y)
+    nonzero_rows = int((np.abs(y).sum(-1) > 0).sum())
+    cap = moe._capacity(64, cfg)
+    assert nonzero_rows <= 2 * cap            # at most E x C served
+    assert np.all(np.isfinite(y))

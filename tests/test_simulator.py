@@ -1,0 +1,123 @@
+"""Simulator-level behaviour tests: the paper's headline claims hold in
+the calibrated DES, and protocol invariants survive end-to-end runs.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import dds, simulator as sim
+from repro.core.views import MembershipService
+
+
+def test_spindle_beats_baseline_by_an_order():
+    spin = sim.run(sim.single_subgroup(8, n_messages=600))
+    base = sim.run(sim.single_subgroup(
+        8, n_messages=200, flags=sim.SpindleFlags.baseline()))
+    assert spin.throughput_GBps > 8 * base.throughput_GBps
+    assert spin.mean_latency_us < base.mean_latency_us / 5
+    # ack coalescing: writes per delivered message drop dramatically
+    spin_wpm = spin.rdma_writes / spin.delivered_app_msgs
+    base_wpm = base.rdma_writes / base.delivered_app_msgs
+    assert spin_wpm < base_wpm / 5
+
+
+def test_all_messages_delivered_exactly_once():
+    cfg = sim.single_subgroup(5, n_messages=300)
+    r = sim.run(cfg)
+    assert not r.stalled
+    # every member delivers every app message exactly once
+    assert r.delivered_app_msgs == 5 * 5 * 300
+
+
+def test_inactive_sender_stalls_without_nulls_only():
+    pats = (((0, 2), sim.SenderPattern(active=False)),)
+    no_nulls = sim.run(sim.single_subgroup(
+        6, n_messages=150, flags=sim.SpindleFlags(null_send=False),
+        patterns=pats, target_delivered=5 * 150, max_time_us=2e5))
+    with_nulls = sim.run(sim.single_subgroup(
+        6, n_messages=150, patterns=pats, target_delivered=5 * 150))
+    assert no_nulls.stalled
+    assert not with_nulls.stalled
+    assert with_nulls.nulls_sent > 0
+
+
+def test_quiescence_no_infinite_nulls():
+    r = sim.run(sim.single_subgroup(4, n_messages=100))
+    # nulls (if any) are bounded by rounds, not unbounded chatter
+    assert r.nulls_sent <= 4 * 100
+    assert not r.stalled
+
+
+def test_throughput_respects_link_bandwidth():
+    r = sim.run(sim.single_subgroup(16, n_messages=800))
+    # per-node egress = 15/16 of delivered bandwidth; must fit 12.5 GB/s
+    egress = r.throughput_GBps * 15 / 16
+    assert egress < 12.5 + 0.1
+
+
+def test_window_size_tradeoff():
+    """Fig. 6: tiny windows strangle batching; w=100 is near the peak."""
+    w5 = sim.run(sim.single_subgroup(8, window=5, n_messages=400))
+    w100 = sim.run(sim.single_subgroup(8, window=100, n_messages=400))
+    assert w100.throughput_GBps > w5.throughput_GBps
+
+
+def test_multi_subgroup_fairness_cost_baseline():
+    """Fig. 8: inactive subgroups drag the baseline down."""
+    def run_k(k, flags, msgs):
+        groups = tuple(
+            sim.SubgroupSpec(members=tuple(range(8)),
+                             senders=tuple(range(8)),
+                             n_messages=msgs if g == 0 else 0)
+            for g in range(k))
+        return sim.run(sim.SimConfig(n_nodes=8, subgroups=groups,
+                                     flags=flags))
+
+    base1 = run_k(1, sim.SpindleFlags.baseline(), 150)
+    base8 = run_k(8, sim.SpindleFlags.baseline(), 150)
+    spin1 = run_k(1, sim.SpindleFlags.spindle(), 500)
+    spin8 = run_k(8, sim.SpindleFlags.spindle(), 500)
+    assert base8.throughput_GBps < 0.75 * base1.throughput_GBps
+    # opportunistic batching absorbs the inactive-subgroup overhead
+    assert spin8.throughput_GBps > 0.5 * spin1.throughput_GBps
+
+
+def test_upcall_delay_sensitivity():
+    """Sec. 3.5: 100us upcalls collapse throughput ~90%."""
+    fast = sim.run(sim.single_subgroup(
+        8, n_messages=250,
+        flags=sim.SpindleFlags(batched_upcall=False)))
+    slow = sim.run(sim.single_subgroup(
+        8, n_messages=250, upcall_extra_us=100.0,
+        flags=sim.SpindleFlags(batched_upcall=False)))
+    assert slow.throughput_GBps < 0.25 * fast.throughput_GBps
+
+
+def test_dds_qos_ordering():
+    """Fig. 18: cheaper QoS >= more expensive QoS, spindle > baseline."""
+    def thr(qos, spindle):
+        domain = dds.single_topic_domain(8, 7, qos=qos)
+        cfg = domain.sim_config(
+            samples_per_publisher=400 if spindle else 120,
+            spindle=spindle)
+        return sim.run(cfg).throughput_GBps
+
+    atomic_s = thr(dds.QoS.ATOMIC_MULTICAST, True)
+    logged_s = thr(dds.QoS.LOGGED, True)
+    atomic_b = thr(dds.QoS.ATOMIC_MULTICAST, False)
+    assert atomic_s >= logged_s * 0.9
+    assert atomic_s > 2 * atomic_b
+
+
+def test_membership_two_phase_properties():
+    ms = MembershipService([0, 1, 2, 3])
+    ms.suspect(0, 2)
+    v = ms.propose_and_install({0: 10, 1: 12, 3: 9})
+    assert v.vid == 1 and 2 not in v.members
+    assert ms.restart_watermark() == 9      # min over survivors
+    # suspicions cleared per view; monotone vid
+    ms.request_join(7)
+    v2 = ms.propose_and_install({m: 20 for m in v.members})
+    assert v2.vid == 2 and 7 in v2.members and 7 in v2.joiners

@@ -1,0 +1,247 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, trainer
+(end-to-end loss decrease + restart), elastic runtime, serving engine.
+"""
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import pipeline
+from repro.models import layers, registry
+from repro.models.config import ModelConfig
+from repro.models.runtime import Runtime
+from repro.optim import adamw
+from repro.train import checkpoint
+from repro.train.elastic import ElasticConfig, ElasticRuntime
+from repro.train.trainer import TrainConfig, Trainer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+TINY = ModelConfig(name="tiny-test", family="dense", n_layers=2,
+                   d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                   vocab_size=512, head_dim=32, tie_embeddings=True)
+registry.register("tiny-test", lambda: TINY)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def _dcfg(**kw):
+    return pipeline.DataConfig(seq_len=32, global_batch=8, vocab_size=512,
+                               **kw)
+
+
+def test_data_deterministic():
+    a = pipeline.ShardedLoader(_dcfg(), 0, 1).batch(7)
+    b = pipeline.ShardedLoader(_dcfg(), 0, 1).batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = pipeline.ShardedLoader(_dcfg(), 0, 1).batch(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_sharding_partitions_global_batch():
+    full = pipeline.ShardedLoader(_dcfg(), 0, 1).batch(3)["tokens"]
+    parts = [pipeline.ShardedLoader(_dcfg(), r, 4).batch(3)["tokens"]
+             for r in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_data_reshard_is_stream_preserving():
+    factory = pipeline.reshard(_dcfg(), old_ranks=4, new_ranks=2)
+    full = pipeline.ShardedLoader(_dcfg(), 0, 1).batch(5)["tokens"]
+    parts = [factory(r).batch(5)["tokens"] for r in range(2)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_data_tokens_in_range():
+    batch = pipeline.ShardedLoader(_dcfg(), 0, 1).batch(0)["tokens"]
+    assert batch.min() >= 0 and batch.max() < 512
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    cfg = adamw.OptConfig(peak_lr=0.1, warmup_steps=5, decay_steps=200,
+                          weight_decay=0.0, clip_norm=10.0)
+    params = {"w": jnp.ones((8,)) * 5.0}
+    state = adamw.init(params)
+    loss = lambda p: jnp.sum(jnp.square(p["w"] - 2.0))  # noqa: E731
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.update(cfg, g, state,
+                                        param_dtype=jnp.float32)
+    assert float(loss(params)) < 0.05
+
+
+def test_adamw_schedule_shape():
+    cfg = adamw.OptConfig(peak_lr=1e-3, warmup_steps=10, decay_steps=100)
+    lrs = [float(adamw.schedule(cfg, jnp.int32(s))) for s in range(110)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9          # warmup rises
+    assert abs(lrs[10] - 1e-3) < 1e-4              # peak
+    assert lrs[-1] < lrs[50] < lrs[11]             # cosine decays
+    assert lrs[-1] >= cfg.peak_lr * cfg.min_lr_frac - 1e-9
+
+
+def test_adamw_clips_gradients():
+    cfg = adamw.OptConfig(clip_norm=1.0, warmup_steps=0, decay_steps=10)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init(params)
+    g = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw.update(cfg, g, state, param_dtype=jnp.float32)
+    assert float(metrics["grad_norm"]) > 1e5   # reported pre-clip
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_latest():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 3, tree, extra={"note": "x"})
+        checkpoint.save(d, 7, tree)
+        assert checkpoint.latest_step(d) == 7
+        step, restored, extra = checkpoint.restore(d, tree, step=3)
+        assert step == 3 and extra == {"note": "x"}
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_prune_keeps_latest():
+    tree = {"a": jnp.zeros((2,))}
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            checkpoint.save(d, s, tree)
+        checkpoint.prune(d, keep=2)
+        assert checkpoint.latest_step(d) == 5
+        step, _, _ = checkpoint.restore(d, tree)
+        assert step == 5
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 1, {"a": jnp.zeros((2,))})
+        with pytest.raises(ValueError):
+            checkpoint.restore(d, {"a": jnp.zeros((3,))})
+
+
+# ---------------------------------------------------------------------------
+# trainer end-to-end
+# ---------------------------------------------------------------------------
+
+def test_trainer_loss_decreases_and_restarts():
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainConfig(steps=40, seq_len=64, global_batch=4,
+                           checkpoint_dir=d, checkpoint_every=20,
+                           log_every=5, data_patterns=4,
+                           opt=adamw.OptConfig(peak_lr=3e-3,
+                                               warmup_steps=5,
+                                               decay_steps=40))
+        tr = Trainer("tiny-test", TINY, tcfg, Runtime())
+        tr.run()
+        losses = [h["loss"] for h in tr.history]
+        assert losses[-1] < losses[0] * 0.9, losses
+        assert checkpoint.latest_step(d) == 40
+        # restart continues from the watermark, not from scratch
+        tr2 = Trainer("tiny-test", TINY,
+                      dataclasses.replace(tcfg, steps=45), Runtime())
+        tr2.run()
+        assert tr2.history[-1]["step"] == 45
+        # the resumed loss stays near the pre-restart loss
+        assert tr2.history[0]["loss"] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# elastic runtime
+# ---------------------------------------------------------------------------
+
+def test_elastic_failure_triggers_view_change():
+    rt = ElasticRuntime(list(range(8)),
+                        ElasticConfig(heartbeat_timeout=2))
+    for _ in range(3):
+        rt.step()
+    rt.fail(5)
+    changed = False
+    for _ in range(6):
+        info = rt.step()
+        changed = changed or info["view_change"] is not None
+    assert changed
+    assert 5 not in rt.view.members and len(rt.view.members) == 7
+
+
+def test_elastic_straggler_null_rounds_not_eviction():
+    rt = ElasticRuntime(list(range(4)),
+                        ElasticConfig(heartbeat_timeout=5))
+    rt.delay(2, 3)
+    nulls = 0
+    for _ in range(6):
+        info = rt.step()
+        nulls += len(info["null_rounds"])
+        assert info["view_change"] is None
+    assert nulls == 3
+    assert 2 in rt.view.members
+
+
+def test_elastic_join_and_watermark():
+    rt = ElasticRuntime(list(range(4)))
+    for _ in range(5):
+        rt.step()
+    rt.join(9)
+    info = rt.step()
+    assert info["view_change"] is not None
+    assert 9 in rt.view.members
+    assert rt.restart_watermark() >= 5  # survivors carry the watermark
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_engine_serves_all_requests():
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    cfg = TINY
+    params = layers.init_tree(registry.param_specs(cfg), jax.random.key(0))
+    eng = ServeEngine("tiny-test", params, cfg,
+                      EngineConfig(max_batch=3, max_len=48), Runtime())
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, 512, 4, dtype=np.int32),
+                           max_new_tokens=5))
+    done = eng.run_until_drained()
+    assert len(done) == 5
+    assert all(len(r.tokens_out) == 5 for r in done)
+    assert all(0 <= t < 512 for r in done for t in r.tokens_out)
+
+
+def test_engine_greedy_is_deterministic_per_prompt():
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    cfg = TINY
+    params = layers.init_tree(registry.param_specs(cfg), jax.random.key(0))
+    prompt = np.arange(4, dtype=np.int32) + 7
+
+    def run_once(n_background: int):
+        eng = ServeEngine("tiny-test", params, cfg,
+                          EngineConfig(max_batch=4, max_len=48), Runtime())
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+        rng = np.random.default_rng(1)
+        for i in range(n_background):
+            eng.submit(Request(rid=100 + i,
+                               prompt=rng.integers(0, 512, 3,
+                                                   dtype=np.int32),
+                               max_new_tokens=6))
+        done = eng.run_until_drained()
+        return next(r.tokens_out for r in done if r.rid == 0)
+
+    # continuous batching must not change a request's greedy output
+    assert run_once(0) == run_once(3)
