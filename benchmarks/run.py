@@ -1,4 +1,6 @@
-"""Benchmark harness — one function per paper table/figure.
+"""Benchmark harness — one function per paper table/figure, driven through
+the unified Group API (every scenario is a GroupConfig run on the ``des``
+backend; the ``backends`` bench runs one scenario across all three).
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call = simulated mean
 per-message delivery interval at one node; derived = the figure's headline
@@ -17,6 +19,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core import costmodel, dds, simulator as sim
+from repro.core.group import Group, RunReport, single_group
 
 RESULTS = Path("results/bench")
 _ROWS = []
@@ -29,15 +32,18 @@ def emit(name: str, us_per_call: float, derived: float, **extra):
     print(f"{name},{us_per_call:.3f},{derived:.4f}", flush=True)
 
 
-def run_sim(cfg: sim.SimConfig, key: str) -> sim.SimResult:
-    if key in _CACHE:
-        return _CACHE[key]
-    r = sim.run(cfg)
-    _CACHE[key] = r
-    return r
+def run_group(make_group, key: str) -> RunReport:
+    """Run ``make_group()`` on the des backend of the Group API (cached)."""
+    if key not in _CACHE:
+        _CACHE[key] = make_group().run(backend="des")
+    return _CACHE[key]
 
 
-def _per_msg_us(r: sim.SimResult) -> float:
+def run_sim(cfg: sim.SimConfig, key: str) -> RunReport:
+    return run_group(lambda: Group.from_sim_config(cfg), key)
+
+
+def _per_msg_us(r: RunReport) -> float:
     if r.delivered_app_msgs == 0:
         return float("inf")
     per_node = r.delivered_app_msgs / max(len(r.per_node_throughput), 1)
@@ -246,13 +252,30 @@ def fig18_dds_qos():
     for qos in dds.QoS:
         for spindle in (False, True):
             domain = dds.single_topic_domain(16, 15, qos=qos)
-            cfg = domain.sim_config(
+            r = run_group(lambda: domain.group(
                 samples_per_publisher=150 if not spindle else 800,
-                spindle=spindle)
-            r = run_sim(cfg, f"dds_{qos.value}_{spindle}")
+                spindle=spindle), f"dds_{qos.value}_{spindle}")
             tag = "spindle" if spindle else "baseline"
             emit(f"fig18/{qos.value}_{tag}", _per_msg_us(r),
                  r.throughput_GBps)
+
+
+def backends_cross_substrate():
+    """One GroupConfig scenario on all three protocol backends — the
+    unified-API like-for-like comparison (des vs graph vs pallas)."""
+    cfg = single_group(8, n_senders=4, msg_size=4096, window=32,
+                       n_messages=60)
+    seqs = {}
+    for backend in ("des", "graph", "pallas"):
+        g = Group(cfg)
+        r = g.run(backend=backend)
+        seqs[backend] = g.subgroup(0).delivered(0)
+        emit(f"backends/{backend}", _per_msg_us(r), r.throughput_GBps,
+             rdma_writes=r.rdma_writes, nulls=r.nulls_sent,
+             delivered_app=r.delivered_app_msgs, stalled=r.stalled)
+    agree = seqs["des"] == seqs["graph"] == seqs["pallas"]
+    emit("backends/delivery_order_identical", 0.0, float(agree))
+    assert agree, "backends disagree on the delivered total order"
 
 
 def sec35_upcall_delay():
@@ -320,6 +343,7 @@ BENCHES = {
     "fig18": fig18_dds_qos,
     "sec35": sec35_upcall_delay,
     "gradsync": gradsync_collectives,
+    "backends": backends_cross_substrate,
 }
 
 

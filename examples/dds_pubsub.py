@@ -7,14 +7,15 @@ topic at each QoS level — the paper's Fig. 18 scenario.
 Run:  PYTHONPATH=src python examples/dds_pubsub.py
 """
 
-from repro.core import dds, simulator as sim
+from repro.core import dds
+from repro.core.group import RunReport
 
 
-def bench(qos: dds.QoS, spindle: bool, samples: int = 400) -> sim.SimResult:
+def bench(qos: dds.QoS, spindle: bool, samples: int = 400) -> RunReport:
     domain = dds.single_topic_domain(n_nodes=16, n_subscribers=15,
                                      qos=qos)
-    cfg = domain.sim_config(samples_per_publisher=samples, spindle=spindle)
-    return sim.run(cfg)
+    g = domain.group(samples_per_publisher=samples, spindle=spindle)
+    return g.run(backend="des")
 
 
 def main():
@@ -35,15 +36,11 @@ def main():
         domain.create_topic(f"topic{t}", publishers=[t % 16],
                             subscribers=[n for n in range(16)
                                          if n != t % 16])
-    cfg = domain.sim_config(samples_per_publisher=0, spindle=True)
-    # only topic0 publishes
-    groups = list(cfg.subgroups)
-    groups[0] = sim.SubgroupSpec(
-        members=groups[0].members, senders=groups[0].senders,
-        msg_size=groups[0].msg_size, window=groups[0].window,
-        n_messages=400)
-    r = sim.run(sim.SimConfig(n_nodes=16, subgroups=tuple(groups),
-                              flags=cfg.flags))
+    g = domain.group(samples_per_publisher=0, spindle=True)
+    # only topic0 publishes: an explicit Group-API send overrides the
+    # scenario default for that subgroup
+    g.subgroup(0).ordered_send(n=400)
+    r = g.run(backend="des")
     print(f"  active-topic throughput with 9 idle topics: "
           f"{r.throughput_GBps:.2f} GB/s (adaptive batching keeps idle "
           f"subgroups nearly free)")

@@ -1,0 +1,35 @@
+"""repro.api — the stable public surface of the repro.
+
+One import gives the Derecho-style session API::
+
+    from repro import api
+
+    cfg = api.single_group(16, n_messages=1000)
+    g = api.Group(cfg)
+    g.subgroup(0).on_delivery(lambda member, msg: ...)
+    report = g.run(backend="des")        # or "graph" / "pallas"
+
+Everything here is a re-export; the implementations live in
+:mod:`repro.core.group` (the façade + backends), :mod:`repro.core.simulator`
+(flags/specs + the DES), :mod:`repro.core.dds` (pub/sub) and
+:mod:`repro.core.views` (virtual-synchrony membership).
+"""
+
+from repro.core.costmodel import HOST_X86, RDMA_CX6, TPU_ICI
+from repro.core.dds import Domain, QoS, Topic, single_topic_domain
+from repro.core.group import (BACKENDS, Delivery, DeliveryLog, DESBackend,
+                              GraphBackend, Group, GroupConfig,
+                              PallasBackend, ProtocolBackend, RunReport,
+                              SenderPattern, SpindleFlags, SubgroupHandle,
+                              SubgroupSpec, get_backend, register_backend,
+                              single_group)
+from repro.core.views import MembershipService, View
+
+__all__ = [
+    "BACKENDS", "DESBackend", "Delivery", "DeliveryLog", "Domain",
+    "GraphBackend", "Group", "GroupConfig", "HOST_X86", "MembershipService",
+    "PallasBackend", "ProtocolBackend", "QoS", "RDMA_CX6", "RunReport",
+    "SenderPattern", "SpindleFlags", "SubgroupHandle", "SubgroupSpec",
+    "TPU_ICI", "Topic", "View", "get_backend", "register_backend",
+    "single_group", "single_topic_domain",
+]

@@ -12,10 +12,13 @@ Layout:
   gradsync   — the techniques applied to gradient synchronization
   dds        — OMG-DDS pub/sub layer with the paper's four QoS levels
   views      — virtual-synchrony membership for the elastic runtime
+  group      — the unified Derecho-style Group API: one GroupConfig, three
+               pluggable protocol backends (des / graph / pallas), one
+               RunReport (see also repro.api)
 """
 
-from repro.core import (costmodel, dds, delivery, gradsync, nullsend, smc,
-                        simulator, sst, sweep, views)
+from repro.core import (costmodel, dds, delivery, gradsync, group, nullsend,
+                        smc, simulator, sst, sweep, views)
 
-__all__ = ["costmodel", "dds", "delivery", "gradsync", "nullsend", "smc",
-           "simulator", "sst", "sweep", "views"]
+__all__ = ["costmodel", "dds", "delivery", "gradsync", "group", "nullsend",
+           "smc", "simulator", "sst", "sweep", "views"]

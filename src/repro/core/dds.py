@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import simulator as sim
@@ -94,15 +95,18 @@ class Domain:
         self.topics.append(topic)
         return topic
 
-    def sim_config(self, *, samples_per_publisher: int = 1000,
-                   spindle: bool = True,
-                   target_delivered: Optional[int] = None,
-                   **kw) -> sim.SimConfig:
-        """Build the simulator configuration for this domain.
+    def group(self, *, samples_per_publisher: int = 1000,
+              spindle: bool = True,
+              target_delivered: Optional[int] = None, **kw):
+        """Build the unified :class:`repro.core.group.Group` for this
+        domain: one subgroup per topic, QoS lowered to protocol flags.
+        Run it on any backend via ``domain.group().run(backend=...)``.
 
         All topics must share a QoS for a single run (the protocol flags
         are global); benchmark each QoS level separately as the paper does.
         """
+        from repro.core import group as group_mod
+
         if not self.topics:
             raise ValueError("no topics")
         qos = self.topics[0].qos
@@ -111,14 +115,33 @@ class Domain:
         base = (sim.SpindleFlags.spindle() if spindle
                 else sim.SpindleFlags.baseline())
         flags = qos_flags(qos, base)
-        groups = tuple(
+        subgroups = tuple(
             sim.SubgroupSpec(members=t.members, senders=t.publishers,
                              msg_size=t.sample_size, window=t.window,
                              n_messages=samples_per_publisher)
             for t in self.topics)
-        return sim.SimConfig(n_nodes=self.n_nodes, subgroups=groups,
-                             flags=flags, target_delivered=target_delivered,
-                             **kw)
+        cfg = group_mod.GroupConfig(
+            members=tuple(range(self.n_nodes)), subgroups=subgroups,
+            flags=flags, target_delivered=target_delivered, **kw)
+        return group_mod.Group(cfg)
+
+    def sim_config(self, *, samples_per_publisher: int = 1000,
+                   spindle: bool = True,
+                   target_delivered: Optional[int] = None,
+                   **kw) -> sim.SimConfig:
+        """Deprecated: use ``domain.group(...).run(backend="des")``.
+
+        Kept as a thin shim over the Group API so existing callers and
+        saved scripts keep working; it returns the same SimConfig the des
+        backend would lower to.
+        """
+        warnings.warn(
+            "Domain.sim_config is deprecated; use Domain.group() and "
+            "Group.run(backend=...) instead", DeprecationWarning,
+            stacklevel=2)
+        g = self.group(samples_per_publisher=samples_per_publisher,
+                       spindle=spindle, target_delivered=target_delivered)
+        return g.cfg.to_sim_config(**kw)
 
 
 def single_topic_domain(n_nodes: int, n_subscribers: int,

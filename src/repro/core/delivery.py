@@ -59,16 +59,33 @@ class DeliveryBatch:
             yield s, s % self.n_senders, s // self.n_senders
 
 
-def split_app_and_null(batch: DeliveryBatch, null_watermarks) -> tuple:
-    """Count application vs null messages in a batch.
+def split_app_and_null(batch: DeliveryBatch, is_app) -> tuple:
+    """Count (application, null) messages in a delivery batch.
 
-    null_watermarks[s] = number of *application* messages sender s had sent
-    when it appended its nulls is protocol-dependent; the simulator tracks
-    exact per-(sender, index) nullness instead.  This helper exists for the
-    in-graph path where nulls carry a zero payload flag.
+    is_app[rank] is a per-sender boolean sequence over publish indexes
+    (True = application payload, False = null).  Both Group backends
+    produce these logs — the DES from its generation log (NaN = null), the
+    graph/pallas backends from the per-round app/null publish trace — so
+    the :class:`repro.core.group.RunReport` app/null accounting is exact
+    on every substrate.  Indexes past a sender's log (published-but-
+    untracked tail) count as nulls.
+
+    Vectorized: the batch's [lo, hi] seq range decomposes into one
+    contiguous per-sender index range via the round-robin count arithmetic
+    (:func:`repro.core.sst.sender_counts`), so no per-message loop.
     """
-    raise NotImplementedError(
-        "exact nullness is tracked by the caller; see simulator.py")
+    total = len(batch)
+    if total == 0:
+        return 0, 0
+    lo_counts = sst.sender_counts(np.asarray(batch.lo_seq),
+                                  batch.n_senders)
+    hi_counts = sst.sender_counts(np.asarray(batch.hi_seq + 1),
+                                  batch.n_senders)
+    n_app = sum(
+        int(np.count_nonzero(np.asarray(is_app[r], dtype=bool)
+                             [int(lo_counts[r]):int(hi_counts[r])]))
+        for r in range(batch.n_senders))
+    return n_app, total - n_app
 
 
 def deliver(batch: DeliveryBatch,

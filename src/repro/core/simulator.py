@@ -58,6 +58,9 @@ class SenderPattern:
 
     inter_send_delay_us: float = 0.0  # busy-wait after each send
     active: bool = True               # False => never sends (nulls cover it)
+    # Per-sender app-message budget; None = the SubgroupSpec's n_messages.
+    # The Group API lowers explicit per-sender send() counts through this.
+    n_messages: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,7 +190,13 @@ class _Group:
         self.gen_len = np.zeros(n_s, dtype=np.int64)
         self.active = np.array([cfg.pattern(gid, n).active
                                 for n in spec.senders], dtype=bool)
-        self.total_app = int(self.active.sum()) * spec.n_messages
+        # per-sender app budget: pattern override, else the spec default
+        self.msgs = np.array([
+            (cfg.pattern(gid, n).n_messages
+             if cfg.pattern(gid, n).n_messages is not None
+             else spec.n_messages)
+            for n in spec.senders], dtype=np.int64)
+        self.total_app = int((self.msgs * self.active).sum())
         self.smc = smc.SMCConfig(window=spec.window,
                                  max_msg_size=spec.msg_size)
 
@@ -203,8 +212,7 @@ class _Group:
         self.gen_len[s] = need
 
     def app_done(self, s: int) -> bool:
-        return (not self.active[s]) or \
-            self.generated[s] >= self.spec.n_messages
+        return (not self.active[s]) or self.generated[s] >= self.msgs[s]
 
 
 # ---------------------------------------------------------------------------
@@ -305,7 +313,7 @@ class Simulator:
         me = g.member_pos[node]
         cap = self._cap(g, me, s)
         gen_floor = self.app_block_until[node]
-        while (g.generated[s] < g.spec.n_messages
+        while (g.generated[s] < g.msgs[s]
                and int(g.published[s]) + len(g.queued[s]) < cap):
             ready = max(float(g.next_ready[s]), gen_floor)
             if ready > now:
@@ -583,7 +591,7 @@ class Simulator:
     def _any_app_pending(self) -> bool:
         for g in self.groups:
             for s in range(g.n_s):
-                if g.active[s] and (g.generated[s] < g.spec.n_messages
+                if g.active[s] and (g.generated[s] < g.msgs[s]
                                     or g.queued[s]):
                     return True
         return False

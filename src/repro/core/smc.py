@@ -73,7 +73,10 @@ def visible_from_counters(counters, received_count, window: int):
     w = window
     ks = received_count[..., None] + xp.arange(w)          # candidate indexes
     have = xp.take_along_axis(counters, ks % w, axis=-1) >= (ks // w)
-    run = xp.cumprod(have.astype(np.int64), axis=-1).sum(axis=-1)
+    # counters.dtype, not a hard-coded np.int64: under 32-bit JAX an int64
+    # astype is silently truncated (with a warning) — the run length fits
+    # the counter dtype by construction (<= w).
+    run = xp.cumprod(have.astype(counters.dtype), axis=-1).sum(axis=-1)
     return received_count + run
 
 

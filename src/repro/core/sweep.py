@@ -64,12 +64,19 @@ class SweepState:
 
 
 def sweep(state: SweepState, app_ready: Array, *, window: int = 1 << 30,
-          null_send: bool = True) -> Tuple[SweepState, Array]:
+          null_send: bool = True, receive_fn=None
+          ) -> Tuple[SweepState, Array]:
     """One fused protocol round for every node simultaneously.
 
     app_ready: (S,) int32 — app messages each sender wants to publish this
     round (the send predicate's queue).  Sender rank i is member i (the
     first S members are the senders, matching Derecho's rank ordering).
+
+    receive_fn: optional ``(pub_vis, recv_counts) -> new recv_counts``
+    override for the receive predicate's consumption step.  The default is
+    the in-graph ``max`` merge; the pallas Group backend substitutes the
+    fused SMC slot-counter kernel here (same fixed point, evaluated over
+    the real ring data structure).
 
     Returns (new_state, delivered_batch_sizes (N,)).
     """
@@ -78,7 +85,10 @@ def sweep(state: SweepState, app_ready: Array, *, window: int = 1 << 30,
     ranks = jnp.arange(n_senders)
 
     # --- receive predicate (all nodes): consume everything visible -------
-    recv_counts = jnp.maximum(state.recv_counts, state.pub_vis)
+    if receive_fn is None:
+        recv_counts = jnp.maximum(state.recv_counts, state.pub_vis)
+    else:
+        recv_counts = receive_fn(state.pub_vis, state.recv_counts)
     received_num = (sst.rr_prefix(recv_counts) - 1).astype(jnp.int32)
     received_num = jnp.maximum(received_num, state.received_num)
 

@@ -146,3 +146,20 @@ class MembershipService:
         carriers = [m for m in self.view.members if m in old] or \
             list(self.view.members)
         return min(self.rows[m].committed_step for m in carriers)
+
+    # -- Group-API integration ----------------------------------------------
+
+    def reconfigure(self, group, committed_steps: Dict[int, int]):
+        """Drive one view change end-to-end against a
+        :class:`repro.core.group.Group`: run the two-phase install, then
+        restrict every subgroup of ``group`` to the new membership.
+
+        Returns ``(view, new_group)``; ``new_group is group`` when no
+        change was pending.  This is the seam the elastic runtime uses —
+        suspicions/joins accumulate here, the multicast sessions re-form
+        through the Group façade.
+        """
+        if not self.needs_change():
+            return self.view, group
+        view = self.propose_and_install(committed_steps)
+        return view, group.reconfigure(view)

@@ -34,6 +34,22 @@ def _sweep_kernel(counters_ref, processed_ref, visible_ref, *, window: int):
     visible_ref[...] = processed + run
 
 
+def counters_from_counts(published, window: int):
+    """Materialize the SMC slot-counter ring a receiver would observe after
+    ``published`` messages from each sender.
+
+    published: (S,) int32 counts -> (S, W) int32 counters.  Slot ``j``
+    holds the counter of the latest message index ``k < published`` with
+    ``k % W == j`` (``-1`` if the slot was never written) — exactly the
+    state :func:`repro.core.smc.publish` builds incrementally.  This lets
+    the ``pallas`` Group backend drive the kernel from protocol counts.
+    """
+    published = jnp.asarray(published, jnp.int32)
+    slots = jnp.arange(window, dtype=jnp.int32)[None, :]
+    pub = published[:, None]
+    return jnp.where(pub > slots, (pub - 1 - slots) // window, -1)
+
+
 def smc_sweep_pallas(counters, processed, *, block_senders: int = 8,
                      interpret: bool = True):
     """counters: (S, W) int32 slot counters; processed: (S,) int32.

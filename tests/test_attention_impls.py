@@ -8,6 +8,8 @@ import pytest
 
 from repro.models import attention as A
 
+pytestmark = pytest.mark.fast
+
 jax.config.update("jax_platform_name", "cpu")
 
 

@@ -8,6 +8,10 @@ These check the paper's stated invariants:
   * the fused sweep delivers the same total order at every node.
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")  # extras: skip, not a collection error
+
 import hypothesis
 import hypothesis.strategies as st
 import jax
@@ -17,6 +21,8 @@ import pytest
 from hypothesis import given, settings
 
 from repro.core import nullsend, smc, sst, sweep
+
+pytestmark = pytest.mark.fast
 
 jax.config.update("jax_platform_name", "cpu")
 

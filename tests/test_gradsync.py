@@ -6,6 +6,10 @@ friends over vmapped axes), so these run on one CPU device with a real
 "8-worker" axis.
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")  # extras: skip, not a collection error
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
@@ -14,6 +18,8 @@ import pytest
 from hypothesis import given, settings
 
 from repro.core import gradsync
+
+pytestmark = pytest.mark.fast
 
 jax.config.update("jax_platform_name", "cpu")
 

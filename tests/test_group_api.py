@@ -1,0 +1,351 @@
+"""Unified Group API: cross-backend conformance, delivery upcalls,
+explicit sends, app/null accounting, view-driven reconfiguration, and the
+deprecated Domain.sim_config shim.
+
+The load-bearing property: one GroupConfig scenario runs unmodified on the
+``des`` (discrete-event), ``graph`` (fused-sweep scan) and ``pallas``
+(SMC-kernel receive) backends and yields the SAME delivered round-robin
+sequence and app/null accounting — the seam every later scaling PR plugs
+into.
+"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import delivery, dds
+from repro.core import simulator as sim_mod
+
+pytestmark = pytest.mark.fast
+
+
+def _cfg(**kw):
+    base = dict(n_senders=3, msg_size=1024, window=16, n_messages=20)
+    base.update(kw)
+    n = base.pop("n_nodes", 4)
+    return api.single_group(n, **base)
+
+
+def _run(cfg, backend):
+    g = api.Group(cfg)
+    return g, g.run(backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# cross-backend conformance
+# ---------------------------------------------------------------------------
+
+def test_des_and_graph_agree_on_delivered_sequence():
+    cfg = _cfg()
+    gd, rd = _run(cfg, "des")
+    gg, rg = _run(cfg, "graph")
+    for node in cfg.members:
+        assert gd.subgroup(0).delivered(node) == \
+            gg.subgroup(0).delivered(node)
+    assert rd.delivered_app_msgs == rg.delivered_app_msgs == 4 * 3 * 20
+    assert rd.delivered_null_msgs == rg.delivered_null_msgs
+    assert not rd.stalled and not rg.stalled
+
+
+def test_des_and_graph_agree_with_inactive_sender_nulls():
+    """The null-send path: an inactive sender is covered by nulls on both
+    substrates with identical app subsequences and null accounting."""
+    pats = (((0, 1), api.SenderPattern(active=False)),)
+    cfg = _cfg(n_messages=15, patterns=pats, target_delivered=2 * 15)
+    gd, rd = _run(cfg, "des")
+    gg, rg = _run(cfg, "graph")
+    assert rd.nulls_sent > 0 and rg.nulls_sent > 0
+    assert rd.nulls_sent == rg.nulls_sent
+    assert rd.delivered_null_msgs == rg.delivered_null_msgs > 0
+    for node in cfg.members:
+        assert gd.subgroup(0).delivered(node) == \
+            gg.subgroup(0).delivered(node)
+
+
+def test_target_delivered_clips_both_backends_to_same_point():
+    """target_delivered is a measurement window: both substrates clip the
+    delivery log at the target-th app message, so sequences stay
+    comparable even though the DES stops on simulated time."""
+    cfg = _cfg(n_messages=30, target_delivered=10)
+    gd, rd = _run(cfg, "des")
+    gg, rg = _run(cfg, "graph")
+    assert rd.delivered_app_msgs == rg.delivered_app_msgs == 4 * 10
+    for node in cfg.members:
+        assert gd.subgroup(0).delivered(node) == \
+            gg.subgroup(0).delivered(node)
+    assert not rd.stalled and not rg.stalled
+
+
+def test_small_window_throttling_conforms():
+    """A tiny ring window throttles publishing; the graph lowering must
+    requeue (not drop) window-capped sends, like the DES app queue."""
+    cfg = _cfg(window=2, n_messages=20)
+    gd, rd = _run(cfg, "des")
+    gg, rg = _run(cfg, "graph")
+    assert rd.delivered_app_msgs == rg.delivered_app_msgs == 4 * 3 * 20
+    assert not rd.stalled and not rg.stalled
+    for node in cfg.members:
+        assert gd.subgroup(0).delivered(node) == \
+            gg.subgroup(0).delivered(node)
+
+
+def test_sim_config_roundtrip_preserves_des_knobs():
+    cfg = sim_mod.single_subgroup(4, n_messages=5, upcall_extra_us=7.0,
+                                  max_sweeps=999, idle_tick_us=3.0,
+                                  llc_bytes=123)
+    back = api.GroupConfig.from_sim_config(cfg).to_sim_config()
+    assert (back.upcall_extra_us, back.max_sweeps,
+            back.idle_tick_us, back.llc_bytes) == (7.0, 999, 3.0, 123)
+
+
+def test_reconfigure_remaps_gids_when_a_subgroup_dies():
+    """Dropping a subgroup whose members all failed must re-key surviving
+    subgroups' patterns and upcall registrations to their new gids."""
+    spec_a = api.SubgroupSpec(members=(4, 5), senders=(4, 5),
+                              msg_size=64, window=8, n_messages=3)
+    spec_b = api.SubgroupSpec(members=(0, 1, 2), senders=(0, 1),
+                              msg_size=64, window=8, n_messages=3)
+    pats = (((1, 1), api.SenderPattern(active=False)),)
+    g = api.Group(api.GroupConfig(members=(0, 1, 2, 4, 5),
+                                  subgroups=(spec_a, spec_b),
+                                  patterns=pats))
+    hits = []
+    g.subgroup(1).on_delivery(lambda m, d: hits.append(m))
+    g2 = g.reconfigure(api.View(vid=1, members=(0, 1, 2),
+                                senders=(0, 1, 2)))
+    assert len(g2.cfg.subgroups) == 1          # subgroup A died with 4, 5
+    assert g2.cfg.patterns == (((0, 1), pats[0][1]),)   # re-keyed to gid 0
+    r = g2.run(backend="graph")
+    assert hits                                 # upcalls followed the gid
+    # sender 1 stays inactive through the re-keyed pattern
+    assert r.delivered_app_msgs == 3 * 3
+
+
+def test_pallas_backend_matches_graph_exactly():
+    """The kernel-receive path is the same protocol fixed point: delivered
+    sequences and every count agree with the graph backend."""
+    cfg = _cfg(n_messages=12)
+    gg, rg = _run(cfg, "graph")
+    gp, rp = _run(cfg, "pallas")
+    assert rp.backend == "pallas"
+    for node in cfg.members:
+        assert gg.subgroup(0).delivered(node) == \
+            gp.subgroup(0).delivered(node)
+    assert (rg.delivered_app_msgs, rg.delivered_null_msgs, rg.nulls_sent) \
+        == (rp.delivered_app_msgs, rp.delivered_null_msgs, rp.nulls_sent)
+
+
+def test_every_backend_returns_populated_report():
+    cfg = _cfg(n_messages=10)
+    for backend in ("des", "graph", "pallas"):
+        _, r = _run(cfg, backend)
+        assert r.backend == backend
+        assert r.delivered_app_msgs == 4 * 3 * 10
+        assert r.throughput_GBps > 0
+        assert r.mean_latency_us > 0
+        assert r.p99_latency_us >= r.mean_latency_us
+        assert r.rdma_writes > 0
+        assert r.duration_us > 0
+        assert not r.stalled
+        assert isinstance(r.summary(), dict)
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(KeyError):
+        api.Group(_cfg()).run(backend="quantum")
+
+
+# ---------------------------------------------------------------------------
+# sends + upcalls
+# ---------------------------------------------------------------------------
+
+def test_explicit_sends_override_scenario_default():
+    cfg = _cfg(n_senders=2, n_messages=0)
+    for backend in ("des", "graph"):
+        g = api.Group(cfg)
+        h = g.subgroup(0)
+        h.ordered_send(sender=0, n=7)
+        h.send(sender=1, n=3)
+        r = g.run(backend=backend)
+        assert r.delivered_app_msgs == 4 * 10, backend
+        assert not r.stalled
+
+
+def test_run_overrides_apply_consistently_across_backends():
+    """Per-run **overrides must feed the send-count lowering too, so the
+    same override yields the same result on every backend."""
+    pat = (((0, 1), api.SenderPattern(active=False)),)
+    results = {}
+    for backend in ("des", "graph"):
+        g = api.Group(api.single_group(4, n_senders=2, msg_size=256,
+                                       window=8, n_messages=10))
+        results[backend] = g.run(backend, patterns=pat,
+                                 target_delivered=10).delivered_app_msgs
+    assert results["des"] == results["graph"] == 4 * 10
+
+
+def test_multi_subgroup_target_delivered_rejected_on_graph():
+    """SimConfig.target_delivered aggregates per member ACROSS subgroups;
+    the scan has no cross-subgroup round order, so graph/pallas refuse
+    loudly instead of silently diverging from des."""
+    spec = api.SubgroupSpec(members=(0, 1, 2, 3), senders=(0, 1),
+                            msg_size=256, window=8, n_messages=30)
+    cfg = api.GroupConfig(members=(0, 1, 2, 3), subgroups=(spec, spec),
+                          target_delivered=40)
+    with pytest.raises(ValueError):
+        api.Group(cfg).run("graph")
+    api.Group(cfg).run("des")                  # des supports it fine
+
+
+def test_explicit_send_takes_over_pattern_budgets():
+    pats = (((0, 1), api.SenderPattern(n_messages=50)),)
+    g = api.Group(api.single_group(3, n_senders=2, msg_size=256, window=8,
+                                   n_messages=0, patterns=pats))
+    g.subgroup(0).send(sender=0, n=5)
+    r = g.run(backend="graph")
+    # sender 1's 50-message pattern budget is replaced, not mixed in
+    assert r.delivered_app_msgs == 3 * 5
+
+
+def test_send_rejects_non_sender():
+    g = api.Group(_cfg(n_senders=2))
+    with pytest.raises(ValueError):
+        g.subgroup(0).send(sender=3)
+
+
+def test_explicit_sends_conflict_with_sender_override_is_loud():
+    """An override that changes the sender set cannot silently discard
+    queued explicit sends."""
+    g = api.Group(_cfg(n_senders=2, n_messages=5))
+    g.subgroup(0).send(sender=0, n=7)
+    bigger = dataclasses.replace(g.cfg.subgroups[0], senders=(0, 1, 2))
+    with pytest.raises(ValueError):
+        g.run(backend="graph", subgroups=(bigger,))
+
+
+def test_delivery_upcalls_fire_in_total_order():
+    cfg = _cfg(n_senders=2, n_messages=5, n_nodes=3)
+    g = api.Group(cfg)
+    got = []
+    g.subgroup(0).on_delivery(
+        lambda member, d: got.append((member, d.seq)))
+    g.run(backend="graph")
+    assert got, "no upcalls fired"
+    per_member = {}
+    for member, seq in got:
+        assert seq == per_member.get(member, -1) + 1  # gapless, in order
+        per_member[member] = seq
+    assert set(per_member) == set(cfg.subgroups[0].members)
+    assert all(v == 2 * 5 - 1 for v in per_member.values())
+
+
+# ---------------------------------------------------------------------------
+# app/null accounting (the real split_app_and_null)
+# ---------------------------------------------------------------------------
+
+def test_split_app_and_null_counts():
+    batch = delivery.DeliveryBatch(lo_seq=0, hi_seq=5, n_senders=2)
+    # sender 0: app, app, null; sender 1: app, null, null
+    is_app = [np.array([True, True, False]),
+              np.array([True, False, False])]
+    n_app, n_null = delivery.split_app_and_null(batch, is_app)
+    assert (n_app, n_null) == (3, 3)
+    empty = delivery.DeliveryBatch(lo_seq=0, hi_seq=-1, n_senders=2)
+    assert delivery.split_app_and_null(empty, is_app) == (0, 0)
+
+
+def test_report_app_null_accounting_matches_logs():
+    pats = (((0, 2), api.SenderPattern(active=False)),)
+    cfg = _cfg(n_messages=10, patterns=pats, target_delivered=2 * 10)
+    g, r = _run(cfg, "graph")
+    log = g.delivery_logs[0]
+    total_app = sum(log.app_null_counts(n)[0] for n in cfg.members)
+    total_null = sum(log.app_null_counts(n)[1] for n in cfg.members)
+    assert (r.delivered_app_msgs, r.delivered_null_msgs) == \
+        (total_app, total_null)
+    assert total_null > 0
+
+
+# ---------------------------------------------------------------------------
+# reconfiguration through MembershipService
+# ---------------------------------------------------------------------------
+
+def test_membership_service_drives_group_reconfiguration():
+    ms = api.MembershipService([0, 1, 2, 3])
+    g = api.Group(_cfg(n_messages=8))
+    view, g2 = ms.reconfigure(g, {m: 1 for m in range(4)})
+    assert g2 is g and view.vid == 0          # nothing pending: no-op
+    ms.suspect(0, 2)
+    view, g2 = ms.reconfigure(g, {0: 5, 1: 5, 3: 5})
+    assert view.vid == 1 and 2 not in view.members
+    assert g2 is not g
+    assert g2.cfg.epoch == g.cfg.epoch + 1
+    spec = g2.cfg.subgroups[0]
+    assert 2 not in spec.members and 2 not in spec.senders
+    r = g2.run(backend="des")
+    assert not r.stalled
+    # 3 surviving members x 2 surviving senders (rank 2 failed) x 8 msgs
+    assert r.delivered_app_msgs == 3 * 2 * 8
+
+
+def test_reconfigure_carries_upcalls_not_logs():
+    g = api.Group(_cfg(n_messages=4))
+    hits = []
+    g.subgroup(0).on_delivery(lambda m, d: hits.append(m))
+    g.run(backend="graph")
+    n_before = len(hits)
+    assert n_before > 0
+    g2 = g.reconfigure(api.View(vid=1, members=(0, 1, 2),
+                                senders=(0, 1, 2)))
+    assert g2.delivery_logs == {}
+    g2.run(backend="graph")
+    assert len(hits) > n_before               # registration carried over
+
+
+# ---------------------------------------------------------------------------
+# dds integration + deprecated shim
+# ---------------------------------------------------------------------------
+
+def test_domain_group_runs_on_des_and_graph():
+    d = dds.single_topic_domain(4, 3)
+    for backend in ("des", "graph"):
+        r = d.group(samples_per_publisher=15).run(backend=backend)
+        # 1 publisher x 15 samples delivered at all 4 members
+        assert r.delivered_app_msgs == 4 * 15
+        assert not r.stalled
+
+
+def test_domain_sim_config_shim_still_works():
+    d = dds.single_topic_domain(4, 3)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cfg = d.sim_config(samples_per_publisher=15)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    # the shim lowers to exactly what the des backend runs
+    assert cfg.n_nodes == 4
+    assert cfg.subgroups == d.group(
+        samples_per_publisher=15).cfg.to_sim_config().subgroups
+    from repro.core import simulator as sim
+    r = sim.run(dataclasses.replace(cfg))
+    assert r.delivered_app_msgs == 4 * 15
+
+
+# ---------------------------------------------------------------------------
+# config plumbing
+# ---------------------------------------------------------------------------
+
+def test_group_config_roundtrips_through_sim_config():
+    cfg = _cfg()
+    back = api.GroupConfig.from_sim_config(cfg.to_sim_config())
+    assert back.subgroups == cfg.subgroups
+    assert back.flags == cfg.flags
+    assert back.members == cfg.members
+
+
+def test_subgroup_outside_membership_rejected():
+    spec = api.SubgroupSpec(members=(0, 5), senders=(0,))
+    with pytest.raises(AssertionError):
+        api.GroupConfig(members=(0, 1), subgroups=(spec,))

@@ -12,6 +12,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.fast
+
 jax.config.update("jax_platform_name", "cpu")
 
 

@@ -1,6 +1,10 @@
 """MoE dispatch/properties: capacity, first-choice priority, weight
 normalization, drop semantics, and expert-parallel slice equivalence."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # extras: skip, not a collection error
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
@@ -10,6 +14,8 @@ from hypothesis import given, settings
 
 from repro.models import layers, moe
 from repro.models.config import ModelConfig, MoEConfig
+
+pytestmark = pytest.mark.fast
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -1,5 +1,9 @@
 """int8 block-quantize Pallas kernel vs oracle + roundtrip error bounds."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # extras: skip, not a collection error
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
@@ -8,6 +12,8 @@ import pytest
 from hypothesis import given, settings
 
 from repro.kernels.quantize import dequantize_pallas, quantize_pallas
+
+pytestmark = pytest.mark.fast
 
 jax.config.update("jax_platform_name", "cpu")
 
