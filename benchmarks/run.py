@@ -126,9 +126,12 @@ def fig5_incremental_stages():
 
 
 def fig6_window_size():
-    """Ring-buffer window sweep (Fig. 6), all senders, n=16."""
-    for w in (5, 20, 100, 500, 1000):
-        r = run_sim(_single(16, window=w, msgs=800), f"win_{w}")
+    """Ring-buffer window sweep (Fig. 6), all senders, n=16 — the whole
+    grid executes as ONE compiled batched program (Group.run_batch on the
+    graph substrate) instead of 5 sequential runs."""
+    wins = (5, 20, 100, 500, 1000)
+    g = Group(single_group(16, msg_size=10240, window=100, n_messages=800))
+    for w, r in zip(wins, g.run_batch(backend="graph", windows=list(wins))):
         emit(f"fig6/w{w}", _per_msg_us(r), r.throughput_GBps)
 
 
@@ -187,11 +190,14 @@ def fig10_delayed_sender():
 
 
 def fig11_null_overhead():
-    """Null-send overhead under continuous sending (Fig. 11)."""
+    """Null-send overhead under continuous sending (Fig. 11).  Per group
+    size the on/off pair runs as ONE batched program (Group.run_batch over
+    the null_send flag grid on the graph substrate)."""
     for n in (2, 4, 8, 16):
-        r_on = run_sim(_single(n), f"spin_{n}_all")
-        r_off = run_sim(_single(n, flags=_flags(null_send=False),
-                                msgs=1200), f"nonull_{n}")
+        g = Group(single_group(n, msg_size=10240, window=100,
+                               n_messages=1200))
+        r_on, r_off = g.run_batch(backend="graph",
+                                  null_send=[True, False])
         emit(f"fig11/nulls_on_n{n}", _per_msg_us(r_on),
              r_on.throughput_GBps, nulls=r_on.nulls_sent)
         emit(f"fig11/nulls_off_n{n}", _per_msg_us(r_off),
@@ -262,14 +268,25 @@ def fig18_dds_qos():
 
 def backends_cross_substrate():
     """One GroupConfig scenario on all three protocol backends — the
-    unified-API like-for-like comparison (des vs graph vs pallas)."""
+    unified-API like-for-like comparison (des vs graph vs pallas).  The
+    graph/pallas points go through the batched execution path
+    (Group.run_batch), which is asserted to reproduce Group.run exactly."""
     cfg = single_group(8, n_senders=4, msg_size=4096, window=32,
                        n_messages=60)
     seqs = {}
-    for backend in ("des", "graph", "pallas"):
+    g = Group(cfg)
+    r = g.run(backend="des")
+    seqs["des"] = g.subgroup(0).delivered(0)
+    emit("backends/des", _per_msg_us(r), r.throughput_GBps,
+         rdma_writes=r.rdma_writes, nulls=r.nulls_sent,
+         delivered_app=r.delivered_app_msgs, stalled=r.stalled)
+    for backend in ("graph", "pallas"):
         g = Group(cfg)
-        r = g.run(backend=backend)
-        seqs[backend] = g.subgroup(0).delivered(0)
+        (r,) = g.run_batch(backend=backend, windows=[32])
+        log = r.extras["delivery_logs"][0]
+        seqs[backend] = log.sequence(0)
+        r_single = Group(cfg).run(backend=backend)
+        assert r_single.delivered_app_msgs == r.delivered_app_msgs, backend
         emit(f"backends/{backend}", _per_msg_us(r), r.throughput_GBps,
              rdma_writes=r.rdma_writes, nulls=r.nulls_sent,
              delivered_app=r.delivered_app_msgs, stalled=r.stalled)

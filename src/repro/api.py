@@ -9,10 +9,15 @@ One import gives the Derecho-style session API::
     g.subgroup(0).on_delivery(lambda member, msg: ...)
     report = g.run(backend="des")        # or "graph" / "pallas"
 
+    # batched multi-scenario execution: a whole parameter grid as ONE
+    # compiled program (graph/pallas) — see README "Performance"
+    reports = g.run_batch(backend="graph", windows=[5, 20, 100, 500])
+
 Everything here is a re-export; the implementations live in
-:mod:`repro.core.group` (the façade + backends), :mod:`repro.core.simulator`
-(flags/specs + the DES), :mod:`repro.core.dds` (pub/sub) and
-:mod:`repro.core.views` (virtual-synchrony membership).
+:mod:`repro.core.group` (the façade + backends + the compile-once scan
+program cache), :mod:`repro.core.simulator` (flags/specs + the DES),
+:mod:`repro.core.dds` (pub/sub) and :mod:`repro.core.views`
+(virtual-synchrony membership).
 """
 
 from repro.core.costmodel import HOST_X86, RDMA_CX6, TPU_ICI

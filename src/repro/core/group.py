@@ -40,10 +40,13 @@ Reconfiguration across view changes is driven by
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import (Any, Callable, Dict, List, Mapping, Optional, Protocol,
                     Tuple)
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import costmodel, delivery as delivery_mod
@@ -415,6 +418,66 @@ class Group:
         self._fire_upcalls()
         return report
 
+    def run_batch(self, backend="graph", *, windows=None, null_send=None,
+                  n_messages=None) -> List[RunReport]:
+        """Execute a grid of scenario variants as ONE batched program.
+
+        Each keyword is ``None`` (keep the configured value) or a sequence
+        of per-point values; all given grids must share one length B.
+        ``windows``/``n_messages`` replace every subgroup's setting at
+        that point, ``null_send`` replaces the flag.  On the graph/pallas
+        backends the whole grid executes as a single compiled vmapped
+        program (schedules padded to a common round budget, per-point
+        traces sliced back), producing results identical to B sequential
+        :meth:`run` calls — a Fig. 6 window sweep or Fig. 11 null-overhead
+        grid becomes one XLA launch instead of B Python runs.  Backends
+        without a ``run_batch`` (e.g. ``des``) fall back to a sequential
+        loop, keeping cross-backend conformance testable.
+
+        Returns one :class:`RunReport` per point; each report carries its
+        delivery logs in ``extras["delivery_logs"]``.  Delivery upcalls do
+        not fire (batch runs are measurement sweeps)."""
+        grids = {name: list(vals) for name, vals in
+                 (("windows", windows), ("null_send", null_send),
+                  ("n_messages", n_messages)) if vals is not None}
+        if not grids:
+            raise ValueError("run_batch needs at least one grid "
+                             "(windows=, null_send= or n_messages=)")
+        sizes = {len(v) for v in grids.values()}
+        if len(sizes) != 1:
+            raise ValueError("grid lengths differ: " + str(
+                {k: len(v) for k, v in grids.items()}))
+        cfgs = []
+        for i in range(sizes.pop()):
+            cfg = self.cfg
+            over: Dict[str, Any] = {}
+            if windows is not None or n_messages is not None:
+                over["subgroups"] = tuple(
+                    dataclasses.replace(
+                        s,
+                        window=(int(windows[i]) if windows is not None
+                                else s.window),
+                        n_messages=(int(n_messages[i])
+                                    if n_messages is not None
+                                    else s.n_messages))
+                    for s in cfg.subgroups)
+            if null_send is not None:
+                over["flags"] = dataclasses.replace(
+                    cfg.flags, null_send=bool(null_send[i]))
+            cfgs.append(dataclasses.replace(cfg, **over) if over else cfg)
+        counts = [{g: self.send_counts(g, c)
+                   for g in range(len(c.subgroups))} for c in cfgs]
+        be = get_backend(backend)
+        if hasattr(be, "run_batch"):
+            results = be.run_batch(cfgs, counts)
+        else:
+            results = [be.run(c, k) for c, k in zip(cfgs, counts)]
+        reports = []
+        for report, logs in results:
+            report.extras["delivery_logs"] = logs
+            reports.append(report)
+        return reports
+
     def _fire_upcalls(self):
         for gid, fns in self._upcalls.items():
             log = self.delivery_logs.get(gid)
@@ -543,8 +606,13 @@ class DESBackend:
 
 
 # ---------------------------------------------------------------------------
-# "graph" / "pallas" backends — the fused sweep, lowered to round schedules
+# "graph" / "pallas" backends — the fused sweep, compiled once per shape
 # ---------------------------------------------------------------------------
+
+# One entry is appended per TRACE of a scan program (jit runs the Python
+# body only while compiling).  The hot-path tests assert that a repeated
+# Group.run with the same static key leaves this list untouched.
+TRACE_EVENTS: List[Tuple[int, int, str]] = []
 
 
 def _lower_schedule(counts: np.ndarray, rounds: int) -> np.ndarray:
@@ -554,50 +622,166 @@ def _lower_schedule(counts: np.ndarray, rounds: int) -> np.ndarray:
     return (t < counts[None, :]).astype(np.int32)
 
 
-def _round_cost_us(cfg: GroupConfig, spec: sim.SubgroupSpec,
-                   app_pub: np.ndarray) -> Tuple[float, int]:
-    """Cost-model time + RDMA writes for one fused round of one subgroup.
+def _cost_params(cfg: GroupConfig, spec: sim.SubgroupSpec) -> np.ndarray:
+    """Lower the per-round cost model to four coefficients consumed as
+    vectorized in-graph arithmetic by :func:`_scan_core`:
+    ``[base, post, per_msg, wire]``.
 
     Per round every member pushes its SST row (one coalesced 64 B write per
-    peer); a sender that published ``k`` app messages additionally pushes
-    them as one batched slot write of ``k`` slots per peer (the Sec. 3.2
-    batch-send path).  The round takes as long as the busiest node's
-    post+serialization charge plus one wire hop — the same calibrated
-    constants the DES charges, so graph/pallas reports are comparable
-    like-for-like with the ``des`` backend.
+    peer, the ``base`` term); a sender that published ``k`` app messages
+    additionally pushes them as one batched slot write of ``k`` slots per
+    peer (the Sec. 3.2 batch-send path: ``post + per_msg * k``).  The round
+    takes as long as the busiest node's post+serialization charge plus one
+    wire hop — the same calibrated constants the DES charges, so
+    graph/pallas reports are comparable like-for-like with the ``des``
+    backend.
     """
     n = len(spec.members)
     if n <= 1:
-        return 0.0, 0
+        return np.zeros(4)
     slot = spec.msg_size + 8
-    row_writes = n * (n - 1)
-    slot_writes = int(np.count_nonzero(app_pub)) * (n - 1)
     host, net = cfg.host, cfg.net
     base = host.lock_us + 3 * host.predicate_eval_us + \
         (n - 1) * (net.post_us + net.serialization(_ROW_BYTES))
-    busiest = max([0.0] + [
-        (n - 1) * (net.post_us + net.serialization(int(k) * slot))
-        for k in app_pub if k > 0])
-    t = base + busiest + net.wire_latency(min(slot, 4096))
-    return t, row_writes + slot_writes
+    return np.array([base,
+                     (n - 1) * net.post_us,
+                     (n - 1) * net.serialization(slot),
+                     net.wire_latency(min(slot, 4096))])
+
+
+def _kernel_receive(ring_window: int):
+    """Receive-predicate override for the pallas backend: the fused
+    watermark kernel sweeps every (member, sender) ring in one call,
+    rebuilding the counter tile inside the kernel — nothing (N*S, W)-shaped
+    is materialized in-graph per round.  ``ring_window`` is the static ring
+    width (the max window across a batched grid); a ring wider than a
+    point's protocol window is harmless — slots are only reused after W
+    messages and the publish cap uses the per-point window."""
+    from repro.kernels import ops
+
+    def receive(pub_vis, recv_counts):
+        n_m, n_s = pub_vis.shape
+        visible = ops.smc_sweep_watermark(
+            pub_vis.reshape(n_m * n_s), recv_counts.reshape(n_m * n_s),
+            window=ring_window)
+        return jnp.maximum(
+            recv_counts,
+            visible.reshape(n_m, n_s).astype(recv_counts.dtype))
+
+    return receive
+
+
+def _scan_core(n_members: int, n_senders: int, backend: str,
+               ring_window: int):
+    """The traced body shared by the single-run and batched programs:
+    :func:`sweep.scan_rounds` plus the cost model folded in as vectorized
+    in-graph arithmetic (formerly a per-round Python loop)."""
+    receive_fn = _kernel_receive(ring_window) if backend == "pallas" \
+        else None
+    fold_cost = _fold_cost(n_members)
+
+    def core(sched, window, null_send, cost):
+        TRACE_EVENTS.append((n_members, n_senders, backend))
+        state = sweep_mod.SweepState.init(n_members, n_senders)
+        state, (batches, app_pub, nulls) = sweep_mod.scan_rounds(
+            state, sched, window=window, null_send=null_send,
+            receive_fn=receive_fn)
+        round_t, round_w = fold_cost(app_pub, cost)
+        return batches, app_pub, nulls, round_t, round_w
+
+    return core
+
+
+def _fold_cost(n_members: int):
+    """The cost model as vectorized in-graph arithmetic over the (T, S)
+    publish trace: (app_pub, cost coefficients) -> per-round time + RDMA
+    writes arrays."""
+    row_writes = n_members * (n_members - 1)
+
+    def fold(app_pub, cost):
+        # Busiest sender per round: serialization is linear in k, so the
+        # max-k sender is the argmax of post + per_msg * k.
+        kmax = jnp.max(app_pub, axis=1)                            # (T,)
+        busiest = jnp.where(kmax > 0, cost[1] + cost[2] * kmax, 0.0)
+        round_t = cost[0] + busiest + cost[3]                      # (T,)
+        round_w = row_writes + (n_members - 1) * \
+            jnp.sum((app_pub > 0).astype(jnp.int32), axis=1)       # (T,)
+        return round_t, round_w
+
+    return fold
+
+
+@functools.lru_cache(maxsize=None)
+def _scan_program(n_members: int, n_senders: int, window: int,
+                  null_send: bool, backend: str):
+    """Compile-once program for one static scenario shape, cached on
+    ``(n_members, n_senders, window, null_send, backend)`` — repeated
+    ``Group.run`` calls and benchmark sweeps reuse the jitted scan instead
+    of re-tracing it.  (jax additionally keys on the schedule shape, so a
+    different round budget recompiles — same scenario, same program.)"""
+    core = _scan_core(n_members, n_senders, backend, ring_window=window)
+
+    def fn(sched, cost):
+        return core(sched, window, null_send, cost)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _batch_program(n_members: int, n_senders: int, ring_window: int,
+                   backend: str):
+    """Compile-once BATCHED program: :func:`sweep.run_batch` (the vmapped
+    fused sweep) with the window and null-send flag as per-point traced
+    scalars, plus the vmapped cost fold.  ``ring_window`` (the common SMC
+    ring width, max of the grid) only matters to the pallas receive
+    kernel; the graph backend passes 0 so one cache entry serves every
+    grid."""
+    receive_fn = _kernel_receive(ring_window) if backend == "pallas" \
+        else None
+    fold_cost = jax.vmap(_fold_cost(n_members))
+
+    def fn(scheds, windows, null_sends, costs):
+        TRACE_EVENTS.append((n_members, n_senders, backend))
+        states = sweep_mod.batch_states(n_members, n_senders,
+                                        scheds.shape[0])
+        _, (batches, app_pub, nulls) = sweep_mod.run_batch(
+            states, scheds, windows=windows, null_sends=null_sends,
+            receive_fn=receive_fn)
+        round_t, round_w = fold_cost(app_pub, costs)
+        return batches, app_pub, nulls, round_t, round_w
+
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass
+class _GraphAgg:
+    """Accumulates one run's subgroup post-processing into report inputs."""
+
+    duration: float = 0.0
+    writes: int = 0
+    delivered_app: int = 0
+    delivered_null: int = 0
+    nulls_sent: int = 0
+    rounds: int = 0
+    stalled: bool = False
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    per_node_bytes: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+    logs: Dict[int, DeliveryLog] = dataclasses.field(default_factory=dict)
 
 
 class GraphBackend:
-    """Runs the scenario through :func:`repro.core.sweep.sweep` via
-    ``lax.scan`` (the same lowering as :func:`sweep.run_rounds`), tracing
-    per-round app/null publishes so delivery logs and latency can be
-    reconstructed exactly."""
+    """Runs the scenario through :func:`repro.core.sweep.scan_rounds`
+    under a cached jitted program (see :func:`_scan_program`) that also
+    evaluates the cost model in-graph, then reconstructs delivery logs and
+    latency round-pairs from the per-round traces with vectorized numpy.
+    :meth:`run_batch` executes whole scenario grids as ONE vmapped
+    compiled program."""
 
     name = "graph"
 
-    def _receive_fn(self, spec: sim.SubgroupSpec):
-        return None                      # sweep's native jnp consumption
-
-    def run(self, cfg: GroupConfig, counts: Dict[int, np.ndarray]
-            ) -> Tuple[RunReport, Dict[int, DeliveryLog]]:
-        import jax
-        import jax.numpy as jnp
-
+    @staticmethod
+    def _check(cfg: GroupConfig) -> None:
         if cfg.target_delivered is not None and len(cfg.subgroups) > 1:
             # SimConfig.target_delivered is a per-member aggregate ACROSS
             # subgroups (Simulator._done); the scan runs each subgroup on
@@ -608,172 +792,197 @@ class GraphBackend:
                 "target_delivered with multiple subgroups is only "
                 "supported on the 'des' backend")
 
-        logs: Dict[int, DeliveryLog] = {}
-        duration = 0.0
-        writes = 0
-        delivered_app = 0
-        delivered_null = 0
-        nulls_sent = 0
-        latencies: List[float] = []
-        per_node_bytes: Dict[int, float] = {}
-        rounds_total = 0
-        stalled = False
-        wall0 = time.perf_counter()
+    @staticmethod
+    def _rounds_for(cfg: GroupConfig, spec: sim.SubgroupSpec,
+                    counts: np.ndarray) -> int:
+        """Round budget: settle rounds for visibility/null drain, plus
+        slack for ring-window throttling (a small window stretches
+        publishing over ~3 extra rounds per window-full of backlog)."""
+        if cfg.rounds is not None:
+            return cfg.rounds
+        max_c = int(counts.max()) if len(counts) else 0
+        return max_c + 2 * len(spec.members) + 8 + \
+            3 * (max_c // max(spec.window, 1))
 
+    def run(self, cfg: GroupConfig, counts: Dict[int, np.ndarray]
+            ) -> Tuple[RunReport, Dict[int, DeliveryLog]]:
+        self._check(cfg)
+        agg = _GraphAgg()
+        wall0 = time.perf_counter()
         for gid, spec in enumerate(cfg.subgroups):
             c = counts[gid]
-            n_m, n_s = len(spec.members), len(spec.senders)
-            max_c = int(c.max()) if len(c) else 0
-            # settle rounds for visibility/null drain, plus slack for
-            # ring-window throttling (a small window stretches publishing
-            # over ~3 extra rounds per window-full of backlog)
-            rounds = cfg.rounds if cfg.rounds is not None else \
-                max_c + 2 * n_m + 8 + 3 * (max_c // max(spec.window, 1))
-            sched = _lower_schedule(c, rounds)
-            state = sweep_mod.SweepState.init(n_m, n_s)
-            receive_fn = self._receive_fn(spec)
+            rounds = self._rounds_for(cfg, spec, c)
+            program = _scan_program(len(spec.members), len(spec.senders),
+                                    spec.window, cfg.flags.null_send,
+                                    self.name)
+            out = program(jnp.asarray(_lower_schedule(c, rounds)),
+                          jnp.asarray(_cost_params(cfg, spec), jnp.float32))
+            self._accumulate(cfg, spec, gid, c, rounds,
+                             [np.asarray(o) for o in out], agg)
+        return self._report(agg, wall0), agg.logs
 
-            def body(carry, ready):
-                st, backlog = carry
-                # window-throttled messages stay queued (backlog), exactly
-                # like the DES app queue — sweep() only publishes what the
-                # ring-reuse cap admits
-                want = backlog + ready
-                new, batch = sweep_mod.sweep(
-                    st, want, window=spec.window,
-                    null_send=cfg.flags.null_send, receive_fn=receive_fn)
-                pub = new.app_sent - st.app_sent
-                return (new, want - pub), (batch, pub,
-                                           new.nulls_sent - st.nulls_sent)
+    def run_batch(self, cfgs: List[GroupConfig],
+                  counts_list: List[Dict[int, np.ndarray]]
+                  ) -> List[Tuple[RunReport, Dict[int, DeliveryLog]]]:
+        """Execute B scenario variants as one compiled vmapped program per
+        subgroup.  All points must share membership shapes (n_members,
+        n_senders per subgroup); schedules are padded to the common round
+        budget and each point's traces sliced back to its own budget
+        afterwards, so every point's results are identical to a sequential
+        :meth:`run` of that point — the scan prefix depends only on the
+        schedule prefix."""
+        if not cfgs:
+            return []
+        for cfg in cfgs:
+            self._check(cfg)
+        b = len(cfgs)
+        wall0 = time.perf_counter()
+        aggs = [_GraphAgg() for _ in range(b)]
+        for gid in range(len(cfgs[0].subgroups)):
+            specs = [cfg.subgroups[gid] for cfg in cfgs]
+            n_m, n_s = len(specs[0].members), len(specs[0].senders)
+            if any(len(s.members) != n_m or len(s.senders) != n_s
+                   for s in specs):
+                raise ValueError(
+                    "run_batch points must share membership shapes; "
+                    f"subgroup {gid} differs across the grid")
+            rounds = [self._rounds_for(cfg, spec, counts_list[i][gid])
+                      for i, (cfg, spec) in enumerate(zip(cfgs, specs))]
+            t_max = max(rounds)
+            scheds = np.stack([_lower_schedule(counts_list[i][gid], t_max)
+                               for i in range(b)])
+            windows = np.asarray([s.window for s in specs], np.int32)
+            nulls_on = np.asarray([cfg.flags.null_send for cfg in cfgs])
+            costs = np.stack([_cost_params(cfg, spec) for cfg, spec
+                              in zip(cfgs, specs)]).astype(np.float32)
+            ring = int(windows.max()) if self.name == "pallas" else 0
+            program = _batch_program(n_m, n_s, ring, self.name)
+            outs = [np.asarray(o) for o in program(
+                jnp.asarray(scheds), jnp.asarray(windows),
+                jnp.asarray(nulls_on), jnp.asarray(costs))]
+            for i in range(b):
+                point = [o[i][: rounds[i]] for o in outs]
+                self._accumulate(cfgs[i], specs[i], gid,
+                                 counts_list[i][gid], rounds[i], point,
+                                 aggs[i])
+        # one wall clock covers the whole grid — stamp it under a batch
+        # key so nobody mistakes it for a per-point cost
+        return [(self._report(agg, wall0, wall_key="batch_wall_s"),
+                 agg.logs) for agg in aggs]
 
-            # one scan for both paths: the kernel receive closure is pure
-            # traceable JAX (interpret-mode pallas_call included), so the
-            # pallas backend compiles once instead of re-tracing per round
-            carry = (state, jnp.zeros((n_s,), jnp.int32))
-            (state, _), (batches, app_pub, nulls) = jax.lax.scan(
-                body, carry, jnp.asarray(sched))
-            batches = np.asarray(batches)
-            app_pub = np.asarray(app_pub)
-            nulls = np.asarray(nulls)
+    def _accumulate(self, cfg: GroupConfig, spec: sim.SubgroupSpec,
+                    gid: int, c: np.ndarray, rounds: int,
+                    arrays: List[np.ndarray], agg: _GraphAgg) -> None:
+        """Host-side post-processing of one subgroup's per-round traces."""
+        batches, app_pub, nulls, round_t, round_w = arrays
+        log, lat_pairs = self._reconstruct(spec, batches, app_pub, nulls)
+        if cfg.target_delivered is not None:
+            log.truncate_to_app_target(cfg.target_delivered)
+        agg.logs[gid] = log
+        agg.rounds += rounds
+        agg.nulls_sent += int(nulls.sum())
+        agg.writes += int(round_w.astype(np.int64).sum())
+        end_time = np.cumsum(round_t.astype(np.float64))
+        if rounds:
+            agg.duration = max(agg.duration, float(end_time[-1]))
+        if len(lat_pairs):
+            pr, dr = lat_pairs[:, 0], lat_pairs[:, 1]
+            start = np.where(pr > 0, end_time[np.maximum(pr - 1, 0)], 0.0)
+            agg.latencies.extend((end_time[dr] - start).tolist())
+        for node in spec.members:
+            a, nl = log.app_null_counts(node)
+            agg.delivered_app += a
+            agg.delivered_null += nl
+            agg.per_node_bytes[node] = \
+                agg.per_node_bytes.get(node, 0.0) + a * spec.msg_size
+        total_app = int(c.sum())
+        need = total_app if cfg.target_delivered is None else \
+            min(cfg.target_delivered, total_app)
+        if any(log.app_null_counts(node)[0] < need
+               for node in spec.members):
+            agg.stalled = True
 
-            log, lat_rounds = self._reconstruct(spec, state, batches,
-                                                app_pub, nulls)
-            if cfg.target_delivered is not None:
-                log.truncate_to_app_target(cfg.target_delivered)
-            logs[gid] = log
-            rounds_total += rounds
-            nulls_sent += int(nulls.sum())
-
-            # cost-model time + writes per round
-            round_times = []
-            for r in range(rounds):
-                t_r, w_r = _round_cost_us(cfg, spec, app_pub[r])
-                round_times.append(t_r)
-                writes += w_r
-            end_time = np.cumsum(round_times)
-            duration = max(duration, float(end_time[-1]) if rounds else 0.0)
-            latencies.extend(
-                float(end_time[dr] - (end_time[pr - 1] if pr else 0.0))
-                for pr, dr in lat_rounds)
-
-            for node in spec.members:
-                a, nl = log.app_null_counts(node)
-                delivered_app += a
-                delivered_null += nl
-                per_node_bytes[node] = per_node_bytes.get(node, 0.0) + \
-                    a * spec.msg_size
-            total_app = int(c.sum())
-            need = total_app if cfg.target_delivered is None else \
-                min(cfg.target_delivered, total_app)
-            if any(log.app_null_counts(node)[0] < need
-                   for node in spec.members):
-                stalled = True
-
-        per_node = [b / duration / 1e3 for b in per_node_bytes.values()
-                    if duration > 0 and b > 0]
-        lat = np.array(latencies) if latencies else np.array([0.0])
-        report = RunReport(
+    def _report(self, agg: _GraphAgg, wall0: float,
+                wall_key: str = "wall_s") -> RunReport:
+        per_node = [b / agg.duration / 1e3
+                    for b in agg.per_node_bytes.values()
+                    if agg.duration > 0 and b > 0]
+        lat = np.array(agg.latencies) if agg.latencies else np.array([0.0])
+        return RunReport(
             backend=self.name,
             throughput_GBps=float(np.mean(per_node)) if per_node else 0.0,
             mean_latency_us=float(lat.mean()),
             p99_latency_us=float(np.percentile(lat, 99)),
-            duration_us=duration,
-            delivered_app_msgs=delivered_app,
-            delivered_null_msgs=delivered_null,
-            nulls_sent=nulls_sent,
-            rdma_writes=writes,
-            rounds=rounds_total,
+            duration_us=agg.duration,
+            delivered_app_msgs=agg.delivered_app,
+            delivered_null_msgs=agg.delivered_null,
+            nulls_sent=agg.nulls_sent,
+            rdma_writes=agg.writes,
+            rounds=agg.rounds,
             per_node_throughput=per_node,
-            stalled=stalled,
-            extras={"wall_s": time.perf_counter() - wall0},
+            stalled=agg.stalled,
+            extras={wall_key: time.perf_counter() - wall0},
         )
-        return report, logs
 
     @staticmethod
-    def _reconstruct(spec: sim.SubgroupSpec, state, batches: np.ndarray,
+    def _reconstruct(spec: sim.SubgroupSpec, batches: np.ndarray,
                      app_pub: np.ndarray, nulls: np.ndarray):
         """Rebuild the per-sender nullness log and (publish_round,
-        delivery_round) latency samples from the per-round trace.  Within a
-        round a sender publishes its app messages before its nulls
-        (matching :func:`sweep.sweep`'s ``published + app_pub + nulls``)."""
+        delivery_round) latency samples from the per-round trace, fully
+        vectorized (``repeat``/``cumsum``/``searchsorted`` — no
+        per-message Python loop).  Within a round a sender publishes its
+        app messages before its nulls (matching :func:`sweep.sweep`'s
+        ``published + app_pub + nulls``).  Returns the log plus a (K, 2)
+        int array of latency round-pairs sampled at member position 0
+        (as the DES does)."""
         n_s = len(spec.senders)
         rounds = batches.shape[0]
-        is_app: List[List[bool]] = [[] for _ in range(n_s)]
-        pub_round: List[List[int]] = [[] for _ in range(n_s)]
-        for r in range(rounds):
-            for s in range(n_s):
-                for _ in range(int(app_pub[r, s])):
-                    is_app[s].append(True)
-                    pub_round[s].append(r)
-                for _ in range(int(nulls[r, s])):
-                    is_app[s].append(False)
-                    pub_round[s].append(r)
+        is_app: List[np.ndarray] = []
+        pub_round: List[np.ndarray] = []
+        for s in range(n_s):
+            a = app_pub[:, s].astype(np.int64)
+            total = a + nulls[:, s].astype(np.int64)
+            rnd = np.repeat(np.arange(rounds), total)
+            start = np.cumsum(total) - total          # exclusive prefix
+            offset = np.arange(total.sum()) - np.repeat(start, total)
+            is_app.append(offset < np.repeat(a, total))
+            pub_round.append(rnd)
         delivered_num = np.cumsum(batches, axis=0) - 1   # (T, N)
         final = delivered_num[-1] if rounds else \
             np.full(len(spec.members), -1)
         delivered = {node: int(final[pos])
                      for pos, node in enumerate(spec.members)}
-        # latency samples at member position 0 (as the DES does)
-        lat = []
-        if rounds:
+        lat = np.zeros((0, 2), np.int64)
+        if rounds and int(final[0]) >= 0:
             col = delivered_num[:, 0]
-            for seq in range(int(final[0]) + 1):
-                rank, idx = seq % n_s, seq // n_s
-                if not is_app[rank][idx]:
-                    continue
-                dr = int(np.searchsorted(col, seq))
-                lat.append((pub_round[rank][idx], dr))
-        log = DeliveryLog(
-            n_senders=n_s,
-            is_app=[np.array(a, dtype=bool) for a in is_app],
-            delivered_seq=delivered)
+            seqs = np.arange(int(final[0]) + 1)
+            ranks, idxs = seqs % n_s, seqs // n_s
+            maxlen = max(len(x) for x in is_app)
+            flags = np.zeros((n_s, maxlen), bool)
+            rnds = np.zeros((n_s, maxlen), np.int64)
+            for s in range(n_s):
+                flags[s, : len(is_app[s])] = is_app[s]
+                rnds[s, : len(pub_round[s])] = pub_round[s]
+            m = flags[ranks, idxs]
+            lat = np.stack([rnds[ranks[m], idxs[m]],
+                            np.searchsorted(col, seqs[m])], axis=1)
+        log = DeliveryLog(n_senders=n_s, is_app=is_app,
+                          delivered_seq=delivered)
         return log, lat
 
 
 class PallasBackend(GraphBackend):
     """The graph protocol with the receive predicate evaluated by the
-    fused Pallas SMC-sweep kernel over real slot-counter rings — the
-    structural analogue of keeping the SMC polling area cache-resident."""
+    fused Pallas SMC-sweep kernel — the structural analogue of keeping the
+    SMC polling area cache-resident.  The kernel consumes per-sender
+    published watermarks and rebuilds the slot-counter tile inside the
+    kernel (:func:`repro.kernels.smc_sweep.smc_sweep_watermark_pallas`),
+    so the hot loop no longer materializes the (N*S, W) ring in-graph
+    every round; it compiles to Mosaic on TPU and interprets elsewhere.
+    The receive closure is installed by :func:`_kernel_receive` via the
+    cached scan programs."""
 
     name = "pallas"
-
-    def _receive_fn(self, spec: sim.SubgroupSpec):
-        from repro.kernels import ops, smc_sweep as ss
-
-        window = spec.window
-
-        def receive(pub_vis, recv_counts):
-            import jax.numpy as jnp
-            n_m, n_s = pub_vis.shape
-            counters = ss.counters_from_counts(
-                pub_vis.reshape(n_m * n_s), window)
-            visible = ops.smc_sweep(counters,
-                                    recv_counts.reshape(n_m * n_s))
-            return jnp.maximum(recv_counts,
-                               visible.reshape(n_m, n_s).astype(
-                                   recv_counts.dtype))
-
-        return receive
 
 
 def _sum_delivered(logs: Mapping[int, DeliveryLog]) -> Tuple[int, int]:

@@ -40,7 +40,12 @@ class SSTColumn:
 
     name: str
     shape: tuple = ()            # trailing shape of the per-row entry
-    dtype: Any = np.int64
+    # int32, not int64: under 32-bit JAX builds (jax_enable_x64 off, the
+    # default) an int64 schema would be silently downcast on the first
+    # device transfer; declaring int32 keeps host and device tables
+    # byte-identical.  Counters here are bounded by message counts, far
+    # below 2**31.
+    dtype: Any = np.int32
     init: int = -1               # paper: counters start from -1
 
     def empty(self, n_nodes: int, xp=np) -> Array:
@@ -197,8 +202,6 @@ def make_push_rows(mesh: jax.sharding.Mesh, axis_name: str) -> Callable:
     def _inner(own_row, local_copy):
         return push_rows(own_row, local_copy, axis_name)
 
-    n = mesh.shape[axis_name]
-
     row_spec = P(axis_name)
     full_spec = P()
 
@@ -206,5 +209,4 @@ def make_push_rows(mesh: jax.sharding.Mesh, axis_name: str) -> Callable:
     # own_row, full_spec every leaf of local_copy.
     fn = shard_map(_inner, mesh=mesh, in_specs=(row_spec, full_spec),
                    out_specs=full_spec)
-    del n
     return jax.jit(fn)

@@ -63,14 +63,18 @@ class SweepState:
         )
 
 
-def sweep(state: SweepState, app_ready: Array, *, window: int = 1 << 30,
-          null_send: bool = True, receive_fn=None
+def sweep(state: SweepState, app_ready: Array, *, window=1 << 30,
+          null_send=True, receive_fn=None
           ) -> Tuple[SweepState, Array]:
     """One fused protocol round for every node simultaneously.
 
     app_ready: (S,) int32 — app messages each sender wants to publish this
     round (the send predicate's queue).  Sender rank i is member i (the
     first S members are the senders, matching Derecho's rank ordering).
+
+    ``window`` and ``null_send`` may be Python values (static, baked into
+    the trace) or scalar arrays (traced) — the latter is what lets
+    :func:`run_batch` vmap one compiled program over a window/flag grid.
 
     receive_fn: optional ``(pub_vis, recv_counts) -> new recv_counts``
     override for the receive predicate's consumption step.  The default is
@@ -93,7 +97,9 @@ def sweep(state: SweepState, app_ready: Array, *, window: int = 1 << 30,
     received_num = jnp.maximum(received_num, state.received_num)
 
     # --- null predicate (sender nodes) -----------------------------------
-    if null_send:
+    if isinstance(null_send, bool) and not null_send:
+        nulls = jnp.zeros_like(state.published)
+    else:
         sender_rows = recv_counts[:n_senders]                  # (S, S)
         have = sender_rows > 0
         tgt = nullsend.null_target(
@@ -104,8 +110,8 @@ def sweep(state: SweepState, app_ready: Array, *, window: int = 1 << 30,
         next_idx = state.published + app_ready                 # after sends
         nulls = jnp.maximum(target - next_idx, 0)
         nulls = jnp.where(app_ready > 0, 0, nulls)
-    else:
-        nulls = jnp.zeros_like(state.published)
+        # traced flag (run_batch grids): a disabled point masks to zero
+        nulls = jnp.where(jnp.asarray(null_send), nulls, 0)
 
     # --- send predicate (sender nodes), ring-window capped ----------------
     diag = jnp.arange(n_members)
@@ -157,3 +163,63 @@ def run_rounds(state: SweepState, app_schedule: Array, *,
         return st, batch
 
     return jax.lax.scan(body, state, app_schedule)
+
+
+def scan_rounds(state: SweepState, app_schedule: Array, *,
+                window=1 << 30, null_send=True, receive_fn=None
+                ) -> Tuple[SweepState, Tuple[Array, Array, Array]]:
+    """lax.scan with a send-queue backlog and full per-round traces.
+
+    Window-throttled messages are requeued, not dropped — the DES app-queue
+    semantics the Group backends need.  app_schedule: (T, S) app messages
+    becoming ready per round.  ``window``/``null_send`` may be traced
+    scalars (see :func:`sweep`).
+
+    Returns (final_state, (delivered_batches (T, N), app_published (T, S),
+    nulls_published (T, S))) — everything delivery-log reconstruction and
+    the in-graph cost model consume, as arrays.
+    """
+    n_senders = state.published.shape[0]
+
+    def body(carry, ready):
+        st, backlog = carry
+        want = backlog + ready
+        new, batch = sweep(st, want, window=window, null_send=null_send,
+                           receive_fn=receive_fn)
+        pub = new.app_sent - st.app_sent
+        return (new, want - pub), (batch, pub,
+                                   new.nulls_sent - st.nulls_sent)
+
+    carry = (state, jnp.zeros((n_senders,), jnp.int32))
+    (state, _), traces = jax.lax.scan(body, carry, app_schedule)
+    return state, traces
+
+
+def run_batch(states: SweepState, app_schedules: Array, *, windows: Array,
+              null_sends: Array, receive_fn=None
+              ) -> Tuple[SweepState, Tuple[Array, Array, Array]]:
+    """Batched multi-scenario execution: vmap of :func:`scan_rounds`.
+
+    One compiled program sweeps B scenario points at once instead of B
+    sequential Python runs — the systematic-batching lesson (Sec. 3.1–3.2)
+    applied to the coordination substrate itself.
+
+    states: a SweepState whose leaves carry a leading (B,) axis (see
+    :func:`batch_states`); app_schedules: (B, T, S) schedules padded to a
+    common round budget; windows: (B,) int32 ring windows; null_sends:
+    (B,) bool flags.  Returns batched final states and (B, T, ...) traces.
+    """
+    def one(st, sched, w, nf):
+        return scan_rounds(st, sched, window=w, null_send=nf,
+                           receive_fn=receive_fn)
+
+    return jax.vmap(one)(states, app_schedules, jnp.asarray(windows),
+                         jnp.asarray(null_sends))
+
+
+def batch_states(n_members: int, n_senders: int, batch: int) -> SweepState:
+    """A fresh SweepState broadcast over a leading (B,) axis, the carry
+    layout :func:`run_batch` expects."""
+    state = SweepState.init(n_members, n_senders)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (batch,) + x.shape), state)

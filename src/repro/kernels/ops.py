@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import functools
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
@@ -21,7 +20,10 @@ from repro.kernels import ssd_scan as _sc
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    # The single compile-vs-interpret policy lives in
+    # kernels.smc_sweep._auto_interpret (kernels callable without this
+    # wrapper layer need it too); this is the same decision.
+    return _ss._auto_interpret(None)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
@@ -100,13 +102,20 @@ def rms_norm_residual(x, residual, weight, eps: float = 1e-6, *,
 
 
 def smc_sweep(counters, processed, *, block_senders: int = 8):
-    """Batched receive-predicate sweep (see kernels.smc_sweep)."""
-    s = counters.shape[0]
-    pad = (-s) % block_senders
-    if pad:
-        counters = jnp.pad(counters, ((0, pad), (0, 0)))
-        processed = jnp.pad(processed, ((0, pad),))
-    out = _ss.smc_sweep_pallas(counters, processed,
-                               block_senders=block_senders,
-                               interpret=_interpret())
-    return out[:s]
+    """Batched receive-predicate sweep (see kernels.smc_sweep).  The kernel
+    pads non-multiple sender counts internally."""
+    return _ss.smc_sweep_pallas(counters, processed,
+                                block_senders=block_senders,
+                                interpret=_interpret())
+
+
+def smc_sweep_watermark(published, processed, *, window: int,
+                        block_senders: int = 8):
+    """Receive sweep from published watermarks only — the counter ring is
+    rebuilt inside the kernel tile, so no (S, W) array is materialized
+    (see kernels.smc_sweep).  The Group ``pallas`` backend's per-round
+    receive predicate."""
+    return _ss.smc_sweep_watermark_pallas(published, processed,
+                                          window=window,
+                                          block_senders=block_senders,
+                                          interpret=_interpret())

@@ -8,6 +8,20 @@ received_num prefix — i.e. a whole receive-predicate iteration for all
 senders, fused.  The polling area streams HBM->VMEM in (senders x window)
 tiles; this is the structural analogue of keeping the SMC polling area
 cache-resident (Fig. 6's w=100 sweet spot).
+
+Two entry points:
+
+* :func:`smc_sweep_pallas` — sweeps an explicit (S, W) counter ring (the
+  real SMC data structure, e.g. one built by :func:`repro.core.smc.publish`).
+* :func:`smc_sweep_watermark_pallas` — sweeps from per-sender published
+  watermarks only: the counter tile the ring would hold is reconstructed
+  *inside* the kernel (registers/VMEM), so nothing (S, W)-shaped is ever
+  materialized in HBM.  This is the Group hot path: per protocol round it
+  moves O(S) instead of O(S*W) bytes.
+
+Both pad the sender axis to a ``block_senders`` multiple internally (any
+sender count runs; results are sliced back) and compile to Mosaic on TPU,
+falling back to interpret mode elsewhere (``interpret=None`` = auto).
 """
 
 from __future__ import annotations
@@ -20,9 +34,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _sweep_kernel(counters_ref, processed_ref, visible_ref, *, window: int):
-    counters = counters_ref[...]                  # (bs, W) int32
-    processed = processed_ref[...]                # (bs,)  int32
+def _auto_interpret(interpret) -> bool:
+    """Compiled (Mosaic) path on TPU, interpret fallback elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _contiguous_run(counters, processed, window: int):
+    """Shared predicate core: length of the contiguous visible run starting
+    at ``processed`` given a (bs, W) counter tile."""
     bs = counters.shape[0]
     # candidate message indexes k = processed + j, j in [0, W)
     j = jax.lax.broadcasted_iota(jnp.int32, (bs, window), 1)
@@ -30,8 +51,29 @@ def _sweep_kernel(counters_ref, processed_ref, visible_ref, *, window: int):
     slots = ks % window
     want = ks // window
     have = jnp.take_along_axis(counters, slots, axis=1) >= want
-    run = jnp.cumprod(have.astype(jnp.int32), axis=1).sum(axis=1)
-    visible_ref[...] = processed + run
+    return jnp.cumprod(have.astype(jnp.int32), axis=1).sum(axis=1)
+
+
+def _sweep_kernel(counters_ref, processed_ref, visible_ref, *, window: int):
+    counters = counters_ref[...]                  # (bs, W) int32
+    processed = processed_ref[...]                # (bs,)  int32
+    visible_ref[...] = processed + _contiguous_run(counters, processed,
+                                                   window)
+
+
+def _watermark_kernel(published_ref, processed_ref, visible_ref, *,
+                      window: int):
+    """Receive sweep with the counter tile rebuilt in-kernel from the
+    published watermark (see :func:`counters_from_counts` for the ring
+    state being reproduced) — no (S, W) array crosses HBM."""
+    published = published_ref[...]                # (bs,) int32
+    processed = processed_ref[...]                # (bs,) int32
+    bs = published.shape[0]
+    slots = jax.lax.broadcasted_iota(jnp.int32, (bs, window), 1)
+    pub = published[:, None]
+    counters = jnp.where(pub > slots, (pub - 1 - slots) // window, -1)
+    visible_ref[...] = processed + _contiguous_run(counters, processed,
+                                                   window)
 
 
 def counters_from_counts(published, window: int):
@@ -41,8 +83,9 @@ def counters_from_counts(published, window: int):
     published: (S,) int32 counts -> (S, W) int32 counters.  Slot ``j``
     holds the counter of the latest message index ``k < published`` with
     ``k % W == j`` (``-1`` if the slot was never written) — exactly the
-    state :func:`repro.core.smc.publish` builds incrementally.  This lets
-    the ``pallas`` Group backend drive the kernel from protocol counts.
+    state :func:`repro.core.smc.publish` builds incrementally.  Prefer
+    :func:`smc_sweep_watermark_pallas` on the hot path, which computes the
+    same tile inside the kernel instead of materializing it here.
     """
     published = jnp.asarray(published, jnp.int32)
     slots = jnp.arange(window, dtype=jnp.int32)[None, :]
@@ -50,20 +93,63 @@ def counters_from_counts(published, window: int):
     return jnp.where(pub > slots, (pub - 1 - slots) // window, -1)
 
 
+def _pad_senders(arrays, block_senders: int, pad_values):
+    s = arrays[0].shape[0]
+    pad = (-s) % block_senders
+    if pad:
+        arrays = [jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1),
+                          constant_values=v)
+                  for a, v in zip(arrays, pad_values)]
+    return arrays, s, s + pad
+
+
 def smc_sweep_pallas(counters, processed, *, block_senders: int = 8,
-                     interpret: bool = True):
+                     interpret=None):
     """counters: (S, W) int32 slot counters; processed: (S,) int32.
-    Returns visible counts (S,) — the batched receive for every sender."""
-    s, w = counters.shape
-    assert s % block_senders == 0, (s, block_senders)
-    return pl.pallas_call(
+    Returns visible counts (S,) — the batched receive for every sender.
+
+    Any S runs: the sender axis is padded to a ``block_senders`` multiple
+    (padding rows sweep an empty ring) and the result sliced back.
+    """
+    w = counters.shape[1]
+    (counters, processed), s, sp = _pad_senders(
+        [counters.astype(jnp.int32), processed.astype(jnp.int32)],
+        block_senders, pad_values=(-1, 0))
+    out = pl.pallas_call(
         functools.partial(_sweep_kernel, window=w),
-        grid=(s // block_senders,),
+        grid=(sp // block_senders,),
         in_specs=[
             pl.BlockSpec((block_senders, w), lambda i: (i, 0)),
             pl.BlockSpec((block_senders,), lambda i: (i,)),
         ],
         out_specs=pl.BlockSpec((block_senders,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((s,), jnp.int32),
-        interpret=interpret,
-    )(counters.astype(jnp.int32), processed.astype(jnp.int32))
+        out_shape=jax.ShapeDtypeStruct((sp,), jnp.int32),
+        interpret=_auto_interpret(interpret),
+    )(counters, processed)
+    return out[:s]
+
+
+def smc_sweep_watermark_pallas(published, processed, *, window: int,
+                               block_senders: int = 8, interpret=None):
+    """published/processed: (S,) int32 -> visible counts (S,).
+
+    Same fixed point as :func:`smc_sweep_pallas` over
+    :func:`counters_from_counts`, but the ring tile lives only inside the
+    kernel: HBM traffic per call is O(S), not O(S*W).  This is what the
+    ``pallas`` Group backend scans every protocol round.
+    """
+    (published, processed), s, sp = _pad_senders(
+        [jnp.asarray(published, jnp.int32), jnp.asarray(processed, jnp.int32)],
+        block_senders, pad_values=(0, 0))
+    out = pl.pallas_call(
+        functools.partial(_watermark_kernel, window=window),
+        grid=(sp // block_senders,),
+        in_specs=[
+            pl.BlockSpec((block_senders,), lambda i: (i,)),
+            pl.BlockSpec((block_senders,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_senders,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((sp,), jnp.int32),
+        interpret=_auto_interpret(interpret),
+    )(published, processed)
+    return out[:s]

@@ -199,6 +199,39 @@ def test_smc_sweep_matches_ref(s, w):
     np.testing.assert_array_equal(np.asarray(got), published)
 
 
+@pytest.mark.parametrize("s", [3, 5, 7, 9])
+def test_smc_sweep_pallas_pads_nondivisible_senders(s):
+    """The kernel itself (not just the ops wrapper) pads the sender axis:
+    3- or 5-sender subgroups run instead of tripping the old assert."""
+    from repro.kernels import smc_sweep as ss
+    rng = np.random.default_rng(11)
+    w = 16
+    processed = rng.integers(0, 20, size=s)
+    published = processed + rng.integers(0, w + 1, size=s)
+    counters = np.asarray(ss.counters_from_counts(published, w))
+    got = ss.smc_sweep_pallas(jnp.asarray(counters), jnp.asarray(processed),
+                              block_senders=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), published)
+
+
+@pytest.mark.parametrize("s,w", [(8, 16), (5, 32), (16, 100)])
+def test_smc_watermark_kernel_matches_materialized_ring(s, w):
+    """The in-kernel ring reconstruction is the same fixed point as
+    sweeping an explicitly materialized counters_from_counts ring."""
+    from repro.kernels import smc_sweep as ss
+    rng = np.random.default_rng(13)
+    processed = rng.integers(0, 50, size=s)
+    published = processed + rng.integers(0, w + 1, size=s)
+    via_ring = ops.smc_sweep(
+        ss.counters_from_counts(jnp.asarray(published), w),
+        jnp.asarray(processed))
+    via_watermark = ops.smc_sweep_watermark(
+        jnp.asarray(published), jnp.asarray(processed), window=w)
+    np.testing.assert_array_equal(np.asarray(via_ring),
+                                  np.asarray(via_watermark))
+    np.testing.assert_array_equal(np.asarray(via_watermark), published)
+
+
 # ---------------------------------------------------------------------------
 # model integration: pallas impl == xla impl end to end
 # ---------------------------------------------------------------------------
