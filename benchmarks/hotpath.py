@@ -12,6 +12,10 @@ are simulated-time):
 * ``window_grid``   — an 8-point Fig.6-style window sweep: 8 sequential
   ``Group.run`` calls vs ONE ``Group.run_batch`` program, asserting the
   per-point delivery logs are byte-identical.
+* ``many_topics``   — the many-group dimension (a 16-topic DDS domain):
+  ONE stacked compiled program for all topics vs 16 sequential
+  single-topic runs, asserting per-topic delivery logs are byte-identical.
+  This is the Derecho/DDS-style workload the stacked refactor targets.
 
 Writes ``BENCH_hotpath.json`` at the repo root (committed — the perf
 baseline later PRs regress against).  ``--smoke`` runs tiny shapes and
@@ -49,8 +53,10 @@ PRE_PR = {
 
 FULL = dict(n=8, senders=4, msgs=150, window=32)
 FULL_GRID = (4, 8, 16, 24, 32, 48, 64, 100)
+FULL_TOPICS = dict(n_nodes=8, n_topics=16, samples=40)
 SMOKE = dict(n=4, senders=2, msgs=24, window=8)
 SMOKE_GRID = (4, 6, 8, 12)
+SMOKE_TOPICS = dict(n_nodes=4, n_topics=16, samples=6)
 
 # --smoke regression gate: fail when current > 3x baseline + slack.  The
 # slack absorbs CI-runner jitter on the millisecond-scale warm metrics but
@@ -123,16 +129,71 @@ def bench_window_grid(shape, grid, backend="graph"):
     }
 
 
-def run_suite(shape, grid):
+def bench_many_topics(shape, backend="graph"):
+    """The many-subgroup dimension: one STACKED run of an n_topics-topic
+    DDS domain vs n_topics sequential single-topic runs (both warm), with
+    byte-identical per-topic delivery logs asserted."""
+    from repro.core import dds
+
+    def domain():
+        return dds.many_topic_domain(shape["n_nodes"], shape["n_topics"],
+                                     subscribers_per_topic=2,
+                                     sample_size=4096, window=16)
+
+    samples = shape["samples"]
+    g = domain().group(samples_per_publisher=samples)
+    t0 = time.perf_counter()
+    g.run(backend=backend)
+    cold = time.perf_counter() - t0
+    warm = float("inf")
+    for _ in range(3):
+        g = domain().group(samples_per_publisher=samples)
+        t0 = time.perf_counter()
+        g.run(backend=backend)
+        warm = min(warm, time.perf_counter() - t0)
+    # sequential per-topic singles (each topic its own compiled program)
+    def solos():
+        from repro import api
+        out = []
+        cfg = g.cfg
+        for spec in cfg.subgroups:
+            out.append(api.Group(api.GroupConfig(
+                members=spec.members, subgroups=(spec,), flags=cfg.flags)))
+        return out
+
+    for solo in solos():                     # warm every solo program
+        solo.run(backend=backend)
+    sequential = float("inf")                # best-of, like the stacked side
+    for _ in range(3):
+        seq_groups = solos()
+        t0 = time.perf_counter()
+        for solo in seq_groups:
+            solo.run(backend=backend)
+        sequential = min(sequential, time.perf_counter() - t0)
+    identical = all(
+        _logs_identical(g.delivery_logs[gid], solo.delivery_logs[0])
+        for gid, solo in enumerate(seq_groups))
+    return {
+        "topics": shape["n_topics"],
+        "cold_s": round(cold, 4),
+        "stacked_warm_s": round(warm, 4),
+        "sequential_warm_s": round(sequential, 4),
+        "speedup_stacked": round(sequential / warm, 1),
+        "logs_identical": bool(identical),
+    }
+
+
+def run_suite(shape, grid, topics):
     return {
         "repeated_run_graph": bench_repeated_run(shape, "graph"),
         "repeated_run_pallas": bench_repeated_run(shape, "pallas"),
         "window_grid_graph": bench_window_grid(shape, grid, "graph"),
+        "many_topics_graph": bench_many_topics(topics, "graph"),
     }
 
 
 def smoke_gate(baseline_path: Path) -> int:
-    results = run_suite(SMOKE, SMOKE_GRID)
+    results = run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS)
     if not baseline_path.exists():
         print(f"no baseline at {baseline_path}; smoke measured only")
         print(json.dumps(results, indent=1))
@@ -141,7 +202,8 @@ def smoke_gate(baseline_path: Path) -> int:
     failures = []
     for bench, metric in (("repeated_run_graph", "warm_s"),
                           ("repeated_run_pallas", "warm_s"),
-                          ("window_grid_graph", "batch_s")):
+                          ("window_grid_graph", "batch_s"),
+                          ("many_topics_graph", "stacked_warm_s")):
         cur = results[bench][metric]
         ref = base.get(bench, {}).get(metric)
         if ref is None:
@@ -152,10 +214,10 @@ def smoke_gate(baseline_path: Path) -> int:
               f"limit {limit:.4f}s) {status}")
         if cur > limit:
             failures.append(bench)
-    grid = results["window_grid_graph"]
-    if not grid["logs_identical"]:
-        print("window_grid_graph: batched logs DIVERGE from sequential")
-        failures.append("logs_identical")
+    for bench in ("window_grid_graph", "many_topics_graph"):
+        if not results[bench]["logs_identical"]:
+            print(f"{bench}: batched/stacked logs DIVERGE from sequential")
+            failures.append(f"{bench}.logs_identical")
     if failures:
         print(f"bench-smoke FAILED: {failures}")
         return 1
@@ -173,10 +235,12 @@ def main() -> int:
         return smoke_gate(args.json)
     record = {
         "pre_pr_baseline": PRE_PR,
-        "full": run_suite(FULL, FULL_GRID),
-        "smoke": run_suite(SMOKE, SMOKE_GRID),
-        "scenario": {"full": {**FULL, "grid": list(FULL_GRID)},
-                     "smoke": {**SMOKE, "grid": list(SMOKE_GRID)}},
+        "full": run_suite(FULL, FULL_GRID, FULL_TOPICS),
+        "smoke": run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS),
+        "scenario": {"full": {**FULL, "grid": list(FULL_GRID),
+                              "topics": dict(FULL_TOPICS)},
+                     "smoke": {**SMOKE, "grid": list(SMOKE_GRID),
+                               "topics": dict(SMOKE_TOPICS)}},
     }
     full = record["full"]
     full["vs_pre_pr"] = {
@@ -196,7 +260,9 @@ def main() -> int:
     ok = (full["repeated_run_graph"]["speedup_cold_over_warm"] >= 10
           and full["vs_pre_pr"]["graph_second_run_speedup"] >= 10
           and full["window_grid_graph"]["speedup_batch"] > 1
-          and full["window_grid_graph"]["logs_identical"])
+          and full["window_grid_graph"]["logs_identical"]
+          and full["many_topics_graph"]["speedup_stacked"] > 1
+          and full["many_topics_graph"]["logs_identical"])
     print("acceptance:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

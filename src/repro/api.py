@@ -21,7 +21,8 @@ program cache), :mod:`repro.core.simulator` (flags/specs + the DES),
 """
 
 from repro.core.costmodel import HOST_X86, RDMA_CX6, TPU_ICI
-from repro.core.dds import Domain, QoS, Topic, single_topic_domain
+from repro.core.dds import (Domain, QoS, Topic, many_topic_domain,
+                            single_topic_domain)
 from repro.core.group import (BACKENDS, Delivery, DeliveryLog, DESBackend,
                               GraphBackend, Group, GroupConfig,
                               PallasBackend, ProtocolBackend, RunReport,
@@ -35,6 +36,6 @@ __all__ = [
     "GraphBackend", "Group", "GroupConfig", "HOST_X86", "MembershipService",
     "PallasBackend", "ProtocolBackend", "QoS", "RDMA_CX6", "RunReport",
     "SenderPattern", "SpindleFlags", "SubgroupHandle", "SubgroupSpec",
-    "TPU_ICI", "Topic", "View", "get_backend", "register_backend",
-    "single_group", "single_topic_domain",
+    "TPU_ICI", "Topic", "View", "get_backend", "many_topic_domain",
+    "register_backend", "single_group", "single_topic_domain",
 ]

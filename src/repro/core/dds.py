@@ -102,6 +102,11 @@ class Domain:
         domain: one subgroup per topic, QoS lowered to protocol flags.
         Run it on any backend via ``domain.group().run(backend=...)``.
 
+        On the graph/pallas backends a many-topic domain lowers to ONE
+        stacked compiled program — all topics' subgroups padded to a
+        common shape and swept together — so a DDS workload with dozens
+        of topics costs one dispatch per run, not one per topic.
+
         All topics must share a QoS for a single run (the protocol flags
         are global); benchmark each QoS level separately as the paper does.
         """
@@ -133,15 +138,24 @@ class Domain:
 
         Kept as a thin shim over the Group API so existing callers and
         saved scripts keep working; it returns the same SimConfig the des
-        backend would lower to.
+        backend would lower to.  The deprecation warns exactly once per
+        process — a script looping over scenarios gets one nudge, not one
+        per call.
         """
-        warnings.warn(
-            "Domain.sim_config is deprecated; use Domain.group() and "
-            "Group.run(backend=...) instead", DeprecationWarning,
-            stacklevel=2)
+        global _SIM_CONFIG_WARNED
+        if not _SIM_CONFIG_WARNED:
+            _SIM_CONFIG_WARNED = True
+            warnings.warn(
+                "Domain.sim_config is deprecated; use Domain.group() and "
+                "Group.run(backend=...) instead", DeprecationWarning,
+                stacklevel=2)
         g = self.group(samples_per_publisher=samples_per_publisher,
                        spindle=spindle, target_delivered=target_delivered)
         return g.cfg.to_sim_config(**kw)
+
+
+# Module-level so the once-ness survives Domain instances; tests reset it.
+_SIM_CONFIG_WARNED = False
 
 
 def single_topic_domain(n_nodes: int, n_subscribers: int,
@@ -154,4 +168,24 @@ def single_topic_domain(n_nodes: int, n_subscribers: int,
     d.create_topic("bench", publishers=[0],
                    subscribers=list(range(1, 1 + n_subscribers)),
                    sample_size=sample_size, qos=qos)
+    return d
+
+
+def many_topic_domain(n_nodes: int, n_topics: int, *,
+                      subscribers_per_topic: int = 2,
+                      qos: QoS = QoS.ATOMIC_MULTICAST,
+                      sample_size: int = 4096,
+                      window: int = 16) -> Domain:
+    """The many-group dimension the stacked backend targets: ``n_topics``
+    topics striped round-robin over the nodes (topic t is published by
+    node ``t % n_nodes`` to the next ``subscribers_per_topic`` nodes).
+    On graph/pallas the whole domain runs as one stacked program."""
+    assert n_nodes >= 2 and subscribers_per_topic + 1 <= n_nodes
+    d = Domain(n_nodes=n_nodes)
+    for t in range(n_topics):
+        pub = t % n_nodes
+        subs = [(pub + 1 + k) % n_nodes
+                for k in range(subscribers_per_topic)]
+        d.create_topic(f"topic-{t}", publishers=[pub], subscribers=subs,
+                       sample_size=sample_size, qos=qos, window=window)
     return d

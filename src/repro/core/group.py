@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import costmodel, delivery as delivery_mod
+from repro.core import placement as placement_mod
 from repro.core import simulator as sim
 from repro.core import sweep as sweep_mod
 from repro.core import views as views_mod
@@ -236,6 +237,16 @@ class DeliveryLog:
                                            n_senders=self.n_senders)
         return delivery_mod.split_app_and_null(batch, self.is_app)
 
+    def app_flags_upto(self, hi: int) -> np.ndarray:
+        """Nullness of seqs ``0..hi`` in the total order (False for seqs
+        beyond any sender's logged publishes)."""
+        flags = np.zeros(max(hi + 1, 0), dtype=bool)
+        for r, log in enumerate(self.is_app):
+            seqs = np.arange(len(log)) * self.n_senders + r
+            m = seqs <= hi
+            flags[seqs[m]] = np.asarray(log, dtype=bool)[: len(seqs)][m]
+        return flags
+
     def truncate_to_app_target(self, target: int) -> None:
         """Clip each member's delivered prefix at its ``target``-th app
         message — the logical form of ``target_delivered``'s measurement
@@ -248,12 +259,7 @@ class DeliveryLog:
         hi_all = max(self.delivered_seq.values(), default=-1)
         if hi_all < 0:
             return
-        flags = np.zeros(hi_all + 1, dtype=bool)
-        for r, log in enumerate(self.is_app):
-            seqs = np.arange(len(log)) * self.n_senders + r
-            m = seqs <= hi_all
-            flags[seqs[m]] = np.asarray(log, dtype=bool)[: len(seqs)][m]
-        cum = np.cumsum(flags)
+        cum = np.cumsum(self.app_flags_upto(hi_all))
         for node, hi in self.delivered_seq.items():
             if hi >= 0 and cum[hi] > target:
                 self.delivered_seq[node] = int(
@@ -426,13 +432,17 @@ class Group:
         of per-point values; all given grids must share one length B.
         ``windows``/``n_messages`` replace every subgroup's setting at
         that point, ``null_send`` replaces the flag.  On the graph/pallas
-        backends the whole grid executes as a single compiled vmapped
-        program (schedules padded to a common round budget, per-point
-        traces sliced back), producing results identical to B sequential
-        :meth:`run` calls — a Fig. 6 window sweep or Fig. 11 null-overhead
-        grid becomes one XLA launch instead of B Python runs.  Backends
-        without a ``run_batch`` (e.g. ``des``) fall back to a sequential
-        loop, keeping cross-backend conformance testable.
+        backends the whole grid executes as a single compiled program —
+        every point, every subgroup — sharded across ``jax.devices()``
+        via shard_map when the batch divides over more than one device
+        (plain vmap on a single device; see
+        :mod:`repro.core.placement`).  Schedules are padded to a common
+        round budget and per-point traces sliced back, producing results
+        identical to B sequential :meth:`run` calls — a Fig. 6 window
+        sweep or Fig. 11 null-overhead grid becomes one XLA launch
+        instead of B Python runs.  Backends without a ``run_batch``
+        (e.g. ``des``) fall back to a sequential loop, keeping
+        cross-backend conformance testable.
 
         Returns one :class:`RunReport` per point; each report carries its
         delivery logs in ``extras["delivery_logs"]``.  Delivery upcalls do
@@ -606,13 +616,17 @@ class DESBackend:
 
 
 # ---------------------------------------------------------------------------
-# "graph" / "pallas" backends — the fused sweep, compiled once per shape
+# "graph" / "pallas" backends — the fused STACKED sweep: one compiled
+# program per whole-group scenario shape (all subgroups padded + masked),
+# one device-sharded program per scenario grid
 # ---------------------------------------------------------------------------
 
-# One entry is appended per TRACE of a scan program (jit runs the Python
-# body only while compiling).  The hot-path tests assert that a repeated
-# Group.run with the same static key leaves this list untouched.
-TRACE_EVENTS: List[Tuple[int, int, str]] = []
+# One entry is appended per TRACE of a stacked program (jit runs the
+# Python body only while compiling): the per-subgroup member/sender size
+# tuples plus the backend name.  The hot-path tests assert that a repeated
+# Group.run with the same static key leaves this list untouched, and the
+# stacked tests that a G-subgroup run appends exactly ONE entry.
+TRACE_EVENTS: List[Tuple[Tuple[int, ...], Tuple[int, ...], str]] = []
 
 
 def _lower_schedule(counts: np.ndarray, rounds: int) -> np.ndarray:
@@ -623,9 +637,9 @@ def _lower_schedule(counts: np.ndarray, rounds: int) -> np.ndarray:
 
 
 def _cost_params(cfg: GroupConfig, spec: sim.SubgroupSpec) -> np.ndarray:
-    """Lower the per-round cost model to four coefficients consumed as
-    vectorized in-graph arithmetic by :func:`_scan_core`:
-    ``[base, post, per_msg, wire]``.
+    """Lower the per-round cost model to six coefficients consumed as
+    vectorized in-graph arithmetic by :func:`_fold_cost`:
+    ``[base, post, per_msg, wire, row_writes, peers]``.
 
     Per round every member pushes its SST row (one coalesced 64 B write per
     peer, the ``base`` term); a sender that published ``k`` app messages
@@ -634,11 +648,13 @@ def _cost_params(cfg: GroupConfig, spec: sim.SubgroupSpec) -> np.ndarray:
     takes as long as the busiest node's post+serialization charge plus one
     wire hop — the same calibrated constants the DES charges, so
     graph/pallas reports are comparable like-for-like with the ``des``
-    backend.
+    backend.  ``row_writes`` (= n*(n-1)) and ``peers`` (= n-1) carry the
+    membership size into the fold so one shape-agnostic fold serves every
+    subgroup of a padded stack.
     """
     n = len(spec.members)
     if n <= 1:
-        return np.zeros(4)
+        return np.zeros(6)
     slot = spec.msg_size + 8
     host, net = cfg.host, cfg.net
     base = host.lock_us + 3 * host.predicate_eval_us + \
@@ -646,7 +662,24 @@ def _cost_params(cfg: GroupConfig, spec: sim.SubgroupSpec) -> np.ndarray:
     return np.array([base,
                      (n - 1) * net.post_us,
                      (n - 1) * net.serialization(slot),
-                     net.wire_latency(min(slot, 4096))])
+                     net.wire_latency(min(slot, 4096)),
+                     n * (n - 1),
+                     n - 1])
+
+
+def _fold_cost(app_pub, cost):
+    """The cost model as vectorized in-graph arithmetic over the (T, S)
+    publish trace: (app_pub, cost coefficients) -> per-round time + RDMA
+    writes arrays.  Shape-agnostic in the membership size (carried in the
+    coefficients), so it vmaps over subgroup stacks and scenario grids."""
+    # Busiest sender per round: serialization is linear in k, so the
+    # max-k sender is the argmax of post + per_msg * k.
+    kmax = jnp.max(app_pub, axis=1)                            # (T,)
+    busiest = jnp.where(kmax > 0, cost[1] + cost[2] * kmax, 0.0)
+    round_t = cost[0] + busiest + cost[3]                      # (T,)
+    round_w = cost[4].astype(jnp.int32) + cost[5].astype(jnp.int32) * \
+        jnp.sum((app_pub > 0).astype(jnp.int32), axis=1)       # (T,)
+    return round_t, round_w
 
 
 def _kernel_receive(ring_window: int):
@@ -654,16 +687,19 @@ def _kernel_receive(ring_window: int):
     watermark kernel sweeps every (member, sender) ring in one call,
     rebuilding the counter tile inside the kernel — nothing (N*S, W)-shaped
     is materialized in-graph per round.  ``ring_window`` is the static ring
-    width (the max window across a batched grid); a ring wider than a
-    point's protocol window is harmless — slots are only reused after W
-    messages and the publish cap uses the per-point window."""
+    width (the max window across a stacked group / batched grid); a ring
+    wider than a subgroup's protocol window is harmless — slots are only
+    reused after W messages and the publish cap uses the per-subgroup
+    window.  ``valid`` masks padded (member, sender) lanes of a stacked
+    subgroup plane (None when unpadded)."""
     from repro.kernels import ops
 
-    def receive(pub_vis, recv_counts):
+    def receive(pub_vis, recv_counts, valid=None):
         n_m, n_s = pub_vis.shape
+        flat_valid = None if valid is None else valid.reshape(n_m * n_s)
         visible = ops.smc_sweep_watermark(
             pub_vis.reshape(n_m * n_s), recv_counts.reshape(n_m * n_s),
-            window=ring_window)
+            window=ring_window, valid=flat_valid)
         return jnp.maximum(
             recv_counts,
             visible.reshape(n_m, n_s).astype(recv_counts.dtype))
@@ -671,85 +707,82 @@ def _kernel_receive(ring_window: int):
     return receive
 
 
-def _scan_core(n_members: int, n_senders: int, backend: str,
-               ring_window: int):
-    """The traced body shared by the single-run and batched programs:
-    :func:`sweep.scan_rounds` plus the cost model folded in as vectorized
-    in-graph arithmetic (formerly a per-round Python loop)."""
-    receive_fn = _kernel_receive(ring_window) if backend == "pallas" \
-        else None
-    fold_cost = _fold_cost(n_members)
-
-    def core(sched, window, null_send, cost):
-        TRACE_EVENTS.append((n_members, n_senders, backend))
-        state = sweep_mod.SweepState.init(n_members, n_senders)
-        state, (batches, app_pub, nulls) = sweep_mod.scan_rounds(
-            state, sched, window=window, null_send=null_send,
-            receive_fn=receive_fn)
-        round_t, round_w = fold_cost(app_pub, cost)
-        return batches, app_pub, nulls, round_t, round_w
-
-    return core
-
-
-def _fold_cost(n_members: int):
-    """The cost model as vectorized in-graph arithmetic over the (T, S)
-    publish trace: (app_pub, cost coefficients) -> per-round time + RDMA
-    writes arrays."""
-    row_writes = n_members * (n_members - 1)
-
-    def fold(app_pub, cost):
-        # Busiest sender per round: serialization is linear in k, so the
-        # max-k sender is the argmax of post + per_msg * k.
-        kmax = jnp.max(app_pub, axis=1)                            # (T,)
-        busiest = jnp.where(kmax > 0, cost[1] + cost[2] * kmax, 0.0)
-        round_t = cost[0] + busiest + cost[3]                      # (T,)
-        round_w = row_writes + (n_members - 1) * \
-            jnp.sum((app_pub > 0).astype(jnp.int32), axis=1)       # (T,)
-        return round_t, round_w
-
-    return fold
+def _stack_masks(members: Tuple[int, ...], senders: Tuple[int, ...]):
+    """(G, N_max)/(G, S_max) suffix-padding validity masks — or
+    ``(None, None)`` for a homogeneous stack (every subgroup fills the
+    padded shape), which keeps the cheaper unmasked sweep arithmetic on
+    the G=1 and equal-sized-topics hot paths."""
+    n_max, s_max = max(members), max(senders)
+    member_masks = np.arange(n_max)[None, :] < np.asarray(members)[:, None]
+    sender_masks = np.arange(s_max)[None, :] < np.asarray(senders)[:, None]
+    if member_masks.all() and sender_masks.all():
+        return None, None
+    return member_masks, sender_masks
 
 
 @functools.lru_cache(maxsize=None)
-def _scan_program(n_members: int, n_senders: int, window: int,
-                  null_send: bool, backend: str):
-    """Compile-once program for one static scenario shape, cached on
-    ``(n_members, n_senders, window, null_send, backend)`` — repeated
-    ``Group.run`` calls and benchmark sweeps reuse the jitted scan instead
-    of re-tracing it.  (jax additionally keys on the schedule shape, so a
-    different round budget recompiles — same scenario, same program.)"""
-    core = _scan_core(n_members, n_senders, backend, ring_window=window)
+def _scan_program(members: Tuple[int, ...], senders: Tuple[int, ...],
+                  windows: Tuple[int, ...], null_send: bool, backend: str):
+    """Compile-once STACKED program for one whole-group scenario shape,
+    cached on the per-subgroup ``(members, senders, windows)`` signature
+    plus ``(null_send, backend)`` — the unit of compilation is the group,
+    not the subgroup: all G subgroups execute as one fused program
+    (:func:`sweep.run_stacked`), padded to a common (N_max, S_max) with
+    validity masks, with the cost model folded in as vectorized in-graph
+    arithmetic.  Repeated ``Group.run`` calls and benchmark sweeps reuse
+    the jitted program instead of re-tracing it.  (jax additionally keys
+    on the schedule shape, so a different round budget recompiles — same
+    scenario, same program.)"""
+    n_max, s_max = max(members), max(senders)
+    ring = max(windows) if backend == "pallas" else 0
+    receive_fn = _kernel_receive(ring) if backend == "pallas" else None
+    member_masks, sender_masks = _stack_masks(members, senders)
+    win_arr = np.asarray(windows, np.int32)
 
-    def fn(sched, cost):
-        return core(sched, window, null_send, cost)
+    def fn(scheds, costs):
+        TRACE_EVENTS.append((members, senders, backend))
+        states = sweep_mod.batch_states(n_max, s_max, len(members))
+        _, (batches, app_pub, nulls) = sweep_mod.run_stacked(
+            states, scheds, windows=win_arr, null_send=null_send,
+            member_masks=member_masks, sender_masks=sender_masks,
+            receive_fn=receive_fn)
+        round_t, round_w = jax.vmap(_fold_cost)(app_pub, costs)
+        return batches, app_pub, nulls, round_t, round_w
 
     return jax.jit(fn)
 
 
 @functools.lru_cache(maxsize=None)
-def _batch_program(n_members: int, n_senders: int, ring_window: int,
-                   backend: str):
-    """Compile-once BATCHED program: :func:`sweep.run_batch` (the vmapped
-    fused sweep) with the window and null-send flag as per-point traced
-    scalars, plus the vmapped cost fold.  ``ring_window`` (the common SMC
-    ring width, max of the grid) only matters to the pallas receive
-    kernel; the graph backend passes 0 so one cache entry serves every
-    grid."""
+def _batch_program(members: Tuple[int, ...], senders: Tuple[int, ...],
+                   ring_window: int, backend: str, n_shards: int):
+    """Compile-once BATCHED stacked program: B grid points x G subgroups
+    as one device-sharded compiled program.  Windows and null-send flags
+    are per-point traced values; ``ring_window`` (the common SMC ring
+    width, max of the grid) only matters to the pallas receive kernel (the
+    graph backend passes 0 so one cache entry serves every grid).  When
+    ``n_shards > 1`` the leading grid axis is shard_mapped across devices
+    (:func:`repro.core.placement.shard_over_batch`); on a single device it
+    degrades to the plain vmapped program."""
     receive_fn = _kernel_receive(ring_window) if backend == "pallas" \
         else None
-    fold_cost = jax.vmap(_fold_cost(n_members))
+    n_max, s_max = max(members), max(senders)
+    member_masks, sender_masks = _stack_masks(members, senders)
 
     def fn(scheds, windows, null_sends, costs):
-        TRACE_EVENTS.append((n_members, n_senders, backend))
-        states = sweep_mod.batch_states(n_members, n_senders,
-                                        scheds.shape[0])
-        _, (batches, app_pub, nulls) = sweep_mod.run_batch(
+        TRACE_EVENTS.append((members, senders, backend))
+        b = scheds.shape[0]
+        states = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (b,) + x.shape),
+            sweep_mod.batch_states(n_max, s_max, len(members)))
+        _, (batches, app_pub, nulls) = sweep_mod.run_stacked_batch(
             states, scheds, windows=windows, null_sends=null_sends,
+            member_masks=member_masks, sender_masks=sender_masks,
             receive_fn=receive_fn)
-        round_t, round_w = fold_cost(app_pub, costs)
+        round_t, round_w = jax.vmap(jax.vmap(_fold_cost))(app_pub, costs)
         return batches, app_pub, nulls, round_t, round_w
 
+    if n_shards > 1:
+        fn = placement_mod.shard_over_batch(fn, n_shards, n_batched_args=4)
     return jax.jit(fn)
 
 
@@ -771,26 +804,17 @@ class _GraphAgg:
 
 
 class GraphBackend:
-    """Runs the scenario through :func:`repro.core.sweep.scan_rounds`
-    under a cached jitted program (see :func:`_scan_program`) that also
-    evaluates the cost model in-graph, then reconstructs delivery logs and
-    latency round-pairs from the per-round traces with vectorized numpy.
-    :meth:`run_batch` executes whole scenario grids as ONE vmapped
-    compiled program."""
+    """Runs the scenario through :func:`repro.core.sweep.run_stacked`
+    under a cached jitted program (see :func:`_scan_program`) whose unit
+    of compilation is the whole GROUP: all G subgroups, padded to a
+    common (G, N_max, S_max) with validity masks, execute as one fused
+    program with the cost model evaluated in-graph; delivery logs and
+    latency round-pairs are then reconstructed per subgroup from the
+    sliced per-round traces with vectorized numpy.  :meth:`run_batch`
+    executes whole scenario grids as ONE compiled program, shard_mapped
+    across devices when more than one is available."""
 
     name = "graph"
-
-    @staticmethod
-    def _check(cfg: GroupConfig) -> None:
-        if cfg.target_delivered is not None and len(cfg.subgroups) > 1:
-            # SimConfig.target_delivered is a per-member aggregate ACROSS
-            # subgroups (Simulator._done); the scan runs each subgroup on
-            # its own round timeline, so there is no cross-subgroup order
-            # to clip against.  Diverging silently from the des backend
-            # would break the conformance contract — refuse instead.
-            raise ValueError(
-                "target_delivered with multiple subgroups is only "
-                "supported on the 'des' backend")
 
     @staticmethod
     def _rounds_for(cfg: GroupConfig, spec: sim.SubgroupSpec,
@@ -804,80 +828,142 @@ class GraphBackend:
         return max_c + 2 * len(spec.members) + 8 + \
             3 * (max_c // max(spec.window, 1))
 
+    # -- stacking: one group scenario -> padded program inputs ---------------
+
+    def _stack(self, cfg: GroupConfig, counts: Dict[int, np.ndarray]):
+        """Lower one scenario to the stacked program's static key and
+        padded inputs: per-subgroup shape tuples, round budgets, a
+        (G, T_max, S_max) schedule stack and (G, 6) cost coefficients."""
+        members = tuple(len(s.members) for s in cfg.subgroups)
+        senders = tuple(len(s.senders) for s in cfg.subgroups)
+        windows = tuple(s.window for s in cfg.subgroups)
+        rounds = tuple(self._rounds_for(cfg, spec, counts[g])
+                       for g, spec in enumerate(cfg.subgroups))
+        t_max, s_max = max(rounds), max(senders)
+        scheds = np.zeros((len(members), t_max, s_max), np.int32)
+        for g in range(len(members)):
+            scheds[g, :, : senders[g]] = _lower_schedule(counts[g], t_max)
+        costs = np.stack([_cost_params(cfg, spec)
+                          for spec in cfg.subgroups]).astype(np.float32)
+        return members, senders, windows, rounds, scheds, costs
+
     def run(self, cfg: GroupConfig, counts: Dict[int, np.ndarray]
             ) -> Tuple[RunReport, Dict[int, DeliveryLog]]:
-        self._check(cfg)
         agg = _GraphAgg()
         wall0 = time.perf_counter()
-        for gid, spec in enumerate(cfg.subgroups):
-            c = counts[gid]
-            rounds = self._rounds_for(cfg, spec, c)
-            program = _scan_program(len(spec.members), len(spec.senders),
-                                    spec.window, cfg.flags.null_send,
-                                    self.name)
-            out = program(jnp.asarray(_lower_schedule(c, rounds)),
-                          jnp.asarray(_cost_params(cfg, spec), jnp.float32))
-            self._accumulate(cfg, spec, gid, c, rounds,
-                             [np.asarray(o) for o in out], agg)
+        if cfg.subgroups:
+            members, senders, windows, rounds, scheds, costs = \
+                self._stack(cfg, counts)
+            program = _scan_program(members, senders, windows,
+                                    cfg.flags.null_send, self.name)
+            outs = [np.asarray(o) for o in
+                    program(jnp.asarray(scheds), jnp.asarray(costs))]
+            self._finalize(cfg, counts, outs, rounds, agg)
         return self._report(agg, wall0), agg.logs
 
     def run_batch(self, cfgs: List[GroupConfig],
                   counts_list: List[Dict[int, np.ndarray]]
                   ) -> List[Tuple[RunReport, Dict[int, DeliveryLog]]]:
-        """Execute B scenario variants as one compiled vmapped program per
-        subgroup.  All points must share membership shapes (n_members,
-        n_senders per subgroup); schedules are padded to the common round
-        budget and each point's traces sliced back to its own budget
-        afterwards, so every point's results are identical to a sequential
-        :meth:`run` of that point — the scan prefix depends only on the
-        schedule prefix."""
+        """Execute B scenario variants as ONE compiled stacked program —
+        every grid point, every subgroup, one dispatch — sharded over
+        ``jax.devices()`` when the batch divides across more than one
+        (vmap on a single device).  All points must share membership
+        shapes (n_members, n_senders per subgroup); schedules are padded
+        to the common round budget and each point's traces sliced back to
+        its own budget afterwards, so every point's results are identical
+        to a sequential :meth:`run` of that point — the scan prefix
+        depends only on the schedule prefix."""
         if not cfgs:
             return []
-        for cfg in cfgs:
-            self._check(cfg)
+        base = cfgs[0]
+        for i, cfg in enumerate(cfgs[1:], start=1):
+            if len(cfg.subgroups) != len(base.subgroups):
+                raise ValueError(
+                    f"run_batch points must share membership shapes; grid "
+                    f"point {i} has {len(cfg.subgroups)} subgroups, grid "
+                    f"point 0 has {len(base.subgroups)}")
+            for gid, (s0, si) in enumerate(zip(base.subgroups,
+                                               cfg.subgroups)):
+                if (len(si.members) != len(s0.members)
+                        or len(si.senders) != len(s0.senders)):
+                    raise ValueError(
+                        "run_batch points must share membership shapes; "
+                        f"subgroup {gid} at grid point {i} has "
+                        f"{len(si.members)} members / {len(si.senders)} "
+                        f"senders vs grid point 0's {len(s0.members)} / "
+                        f"{len(s0.senders)}")
         b = len(cfgs)
         wall0 = time.perf_counter()
-        aggs = [_GraphAgg() for _ in range(b)]
-        for gid in range(len(cfgs[0].subgroups)):
-            specs = [cfg.subgroups[gid] for cfg in cfgs]
-            n_m, n_s = len(specs[0].members), len(specs[0].senders)
-            if any(len(s.members) != n_m or len(s.senders) != n_s
-                   for s in specs):
-                raise ValueError(
-                    "run_batch points must share membership shapes; "
-                    f"subgroup {gid} differs across the grid")
-            rounds = [self._rounds_for(cfg, spec, counts_list[i][gid])
-                      for i, (cfg, spec) in enumerate(zip(cfgs, specs))]
-            t_max = max(rounds)
-            scheds = np.stack([_lower_schedule(counts_list[i][gid], t_max)
-                               for i in range(b)])
-            windows = np.asarray([s.window for s in specs], np.int32)
-            nulls_on = np.asarray([cfg.flags.null_send for cfg in cfgs])
-            costs = np.stack([_cost_params(cfg, spec) for cfg, spec
-                              in zip(cfgs, specs)]).astype(np.float32)
-            ring = int(windows.max()) if self.name == "pallas" else 0
-            program = _batch_program(n_m, n_s, ring, self.name)
-            outs = [np.asarray(o) for o in program(
-                jnp.asarray(scheds), jnp.asarray(windows),
-                jnp.asarray(nulls_on), jnp.asarray(costs))]
-            for i in range(b):
-                point = [o[i][: rounds[i]] for o in outs]
-                self._accumulate(cfgs[i], specs[i], gid,
-                                 counts_list[i][gid], rounds[i], point,
-                                 aggs[i])
-        # one wall clock covers the whole grid — stamp it under a batch
-        # key so nobody mistakes it for a per-point cost
-        return [(self._report(agg, wall0, wall_key="batch_wall_s"),
-                 agg.logs) for agg in aggs]
+        stacks = [self._stack(cfg, counts_list[i])
+                  for i, cfg in enumerate(cfgs)]
+        members, senders = stacks[0][0], stacks[0][1]
+        t_max = max(max(st[3]) for st in stacks)
+        s_max = max(senders)
+        scheds = np.zeros((b, len(members), t_max, s_max), np.int32)
+        for i, st in enumerate(stacks):
+            scheds[i, :, : st[4].shape[1]] = st[4]
+        windows = np.asarray([st[2] for st in stacks], np.int32)  # (B, G)
+        nulls_on = np.asarray([cfg.flags.null_send for cfg in cfgs])
+        costs = np.stack([st[5] for st in stacks])                # (B, G, 6)
+        ring = int(windows.max()) if self.name == "pallas" else 0
+        n_shards = placement_mod.shard_count(b)
+        program = _batch_program(members, senders, ring, self.name,
+                                 n_shards)
+        outs = [np.asarray(o) for o in program(
+            jnp.asarray(scheds), jnp.asarray(windows),
+            jnp.asarray(nulls_on), jnp.asarray(costs))]
+        results = []
+        for i in range(b):
+            agg = _GraphAgg()
+            self._finalize(cfgs[i], counts_list[i],
+                           [o[i] for o in outs], stacks[i][3], agg)
+            # one wall clock covers the whole grid — stamp it under a
+            # batch key so nobody mistakes it for a per-point cost
+            results.append((self._report(agg, wall0,
+                                         wall_key="batch_wall_s"),
+                            agg.logs))
+        return results
 
-    def _accumulate(self, cfg: GroupConfig, spec: sim.SubgroupSpec,
-                    gid: int, c: np.ndarray, rounds: int,
-                    arrays: List[np.ndarray], agg: _GraphAgg) -> None:
-        """Host-side post-processing of one subgroup's per-round traces."""
-        batches, app_pub, nulls, round_t, round_w = arrays
-        log, lat_pairs = self._reconstruct(spec, batches, app_pub, nulls)
+    # -- host-side post-processing -------------------------------------------
+
+    def _finalize(self, cfg: GroupConfig, counts: Dict[int, np.ndarray],
+                  outs: List[np.ndarray], rounds: Tuple[int, ...],
+                  agg: _GraphAgg) -> None:
+        """Slice one run's stacked (G, T_max, ...) traces back to each
+        subgroup's own round budget and real membership, reconstruct the
+        delivery logs, apply the target-delivered measurement window, and
+        accumulate report inputs."""
+        parts = []
+        for gid, spec in enumerate(cfg.subgroups):
+            n_g, s_g, t_g = len(spec.members), len(spec.senders), rounds[gid]
+            point = [outs[0][gid, :t_g, :n_g], outs[1][gid, :t_g, :s_g],
+                     outs[2][gid, :t_g, :s_g], outs[3][gid, :t_g],
+                     outs[4][gid, :t_g]]
+            log, lat = self._reconstruct(spec, point[0], point[1], point[2])
+            parts.append((gid, spec, point, log, lat))
+        cross_target = (cfg.target_delivered is not None
+                        and len(cfg.subgroups) > 1)
         if cfg.target_delivered is not None:
-            log.truncate_to_app_target(cfg.target_delivered)
+            if cross_target:
+                _clip_target_stacked(cfg, parts)
+            else:
+                parts[0][3].truncate_to_app_target(cfg.target_delivered)
+        for gid, spec, point, log, lat in parts:
+            self._account(cfg, spec, gid, counts[gid], rounds[gid], point,
+                          log, lat, agg,
+                          per_subgroup_stall=not cross_target)
+        if cross_target:
+            agg.stalled = agg.stalled or _stalled_across_subgroups(
+                cfg, counts, agg.logs)
+
+    def _account(self, cfg: GroupConfig, spec: sim.SubgroupSpec,
+                 gid: int, c: np.ndarray, rounds: int,
+                 arrays: List[np.ndarray], log: DeliveryLog,
+                 lat_pairs: np.ndarray, agg: _GraphAgg, *,
+                 per_subgroup_stall: bool = True) -> None:
+        """Accumulate one subgroup's post-processed traces into the
+        report inputs."""
+        batches, app_pub, nulls, round_t, round_w = arrays
         agg.logs[gid] = log
         agg.rounds += rounds
         agg.nulls_sent += int(nulls.sum())
@@ -895,12 +981,13 @@ class GraphBackend:
             agg.delivered_null += nl
             agg.per_node_bytes[node] = \
                 agg.per_node_bytes.get(node, 0.0) + a * spec.msg_size
-        total_app = int(c.sum())
-        need = total_app if cfg.target_delivered is None else \
-            min(cfg.target_delivered, total_app)
-        if any(log.app_null_counts(node)[0] < need
-               for node in spec.members):
-            agg.stalled = True
+        if per_subgroup_stall:
+            total_app = int(c.sum())
+            need = total_app if cfg.target_delivered is None else \
+                min(cfg.target_delivered, total_app)
+            if any(log.app_null_counts(node)[0] < need
+                   for node in spec.members):
+                agg.stalled = True
 
     def _report(self, agg: _GraphAgg, wall0: float,
                 wall_key: str = "wall_s") -> RunReport:
@@ -971,6 +1058,73 @@ class GraphBackend:
         return log, lat
 
 
+def _clip_target_stacked(cfg: GroupConfig, parts) -> None:
+    """Apply the ``target_delivered`` measurement window to a
+    multi-subgroup stacked run.
+
+    The stacked program executes every subgroup on ONE shared round
+    timeline, so — like the DES's per-member aggregate across subgroups
+    (``Simulator._done``) — the window is cross-subgroup: for each member,
+    find the earliest shared round at which its app deliveries summed over
+    its subgroups reach the target, clip each subgroup's delivered prefix
+    for that member to its value at that round, then clip within-subgroup
+    overshoot at the target exactly as the des backend does.  The des
+    backend stops on simulated time (whole batches late, per-subgroup
+    interleaving timing-dependent), so cross-backend conformance here is
+    prefix-consistency of each subgroup's total order plus the target
+    guarantee — not bit-identical cut points (those are only guaranteed
+    between graph/pallas runs and against sequential stacked runs)."""
+    target = cfg.target_delivered
+    per_member: Dict[int, List[Tuple[DeliveryLog, int, np.ndarray,
+                                     np.ndarray]]] = {}
+    for gid, spec, point, log, lat in parts:
+        batches = point[0]
+        if not len(batches):
+            continue
+        delivered_num = np.cumsum(batches.astype(np.int64), axis=0) - 1
+        hi = int(delivered_num.max(initial=-1))
+        # app_cum[k] = app messages among the first k seqs of the order
+        app_cum = np.concatenate(
+            [[0], np.cumsum(log.app_flags_upto(hi))]).astype(np.int64)
+        for pos, node in enumerate(spec.members):
+            col = delivered_num[:, pos]                       # (t_g,)
+            apps = app_cum[col + 1]         # apps delivered by round r
+            per_member.setdefault(node, []).append((log, node, col, apps))
+    for node, entries in per_member.items():
+        t_shared = max(len(col) for _, _, col, _ in entries)
+        total = np.zeros(t_shared, np.int64)
+        for _, _, col, apps in entries:
+            pad = t_shared - len(apps)
+            total += np.concatenate(
+                [apps, np.full(pad, apps[-1] if len(apps) else 0)])
+        hit = np.nonzero(total >= target)[0]
+        if not len(hit):
+            continue                     # target never reached: keep all
+        cut = int(hit[0])
+        for log, node_, col, _ in entries:
+            log.delivered_seq[node_] = int(col[min(cut, len(col) - 1)])
+    for gid, spec, point, log, lat in parts:
+        log.truncate_to_app_target(target)
+
+
+def _stalled_across_subgroups(cfg: GroupConfig,
+                              counts: Dict[int, np.ndarray],
+                              logs: Mapping[int, DeliveryLog]) -> bool:
+    """Multi-subgroup target_delivered stall check: a member stalls when
+    its app deliveries summed over its subgroups fall short of the target
+    (capped by what its subgroups could supply at all)."""
+    delivered: Dict[int, int] = {}
+    avail: Dict[int, int] = {}
+    for gid, spec in enumerate(cfg.subgroups):
+        total_app = int(counts[gid].sum())
+        for node in spec.members:
+            delivered[node] = delivered.get(node, 0) + \
+                logs[gid].app_null_counts(node)[0]
+            avail[node] = avail.get(node, 0) + total_app
+    return any(delivered[node] < min(cfg.target_delivered, avail[node])
+               for node in delivered)
+
+
 class PallasBackend(GraphBackend):
     """The graph protocol with the receive predicate evaluated by the
     fused Pallas SMC-sweep kernel — the structural analogue of keeping the
@@ -979,8 +1133,10 @@ class PallasBackend(GraphBackend):
     kernel (:func:`repro.kernels.smc_sweep.smc_sweep_watermark_pallas`),
     so the hot loop no longer materializes the (N*S, W) ring in-graph
     every round; it compiles to Mosaic on TPU and interprets elsewhere.
-    The receive closure is installed by :func:`_kernel_receive` via the
-    cached scan programs."""
+    In a stacked multi-subgroup program the kernel sweeps the padded
+    (member, sender) plane of every subgroup with an explicit lane
+    validity mask.  The receive closure is installed by
+    :func:`_kernel_receive` via the cached scan programs."""
 
     name = "pallas"
 

@@ -172,6 +172,40 @@ def sender_counts(seq_prefix, n_senders: int):
     return full + (ranks < rem)
 
 
+# -- masked (padded-slot) forms for stacked multi-subgroup execution --------
+#
+# When several subgroups run as one program their sender axes are padded to
+# a common S_max; the round-robin order of each subgroup is still over its
+# OWN sender count.  ``mask`` marks the real sender slots (always a prefix:
+# ranks 0..s_eff-1) and ``s_eff`` is their (possibly traced) count.  With a
+# full mask these reduce exactly to rr_prefix / sender_counts.
+
+def rr_prefix_masked(counts, mask, s_eff) -> Array:
+    """:func:`rr_prefix` over the masked prefix of the sender axis.
+
+    counts: (..., S) integer; mask: (S,) or (..., S) bool, True on the
+    first ``s_eff`` slots; s_eff: scalar (traced OK).  Padded slots never
+    extend the prefix and never hold it back.
+    """
+    big = jnp.iinfo(jnp.asarray(counts).dtype).max
+    m = jnp.min(jnp.where(mask, counts, big), axis=-1, keepdims=True)
+    ge = (counts >= m + 1) & mask
+    run = jnp.cumprod(ge.astype(counts.dtype), axis=-1)
+    extra = jnp.sum(run, axis=-1)
+    return jnp.squeeze(m, -1) * s_eff + extra
+
+
+def sender_counts_masked(seq_prefix, s_eff, n_slots: int) -> Array:
+    """:func:`sender_counts` with a traced effective sender count, padded
+    to ``n_slots`` columns (entries at ranks >= s_eff are meaningless and
+    must be masked by the caller)."""
+    seq_prefix = jnp.asarray(seq_prefix)
+    full = seq_prefix[..., None] // s_eff
+    rem = seq_prefix[..., None] % s_eff
+    ranks = jnp.arange(n_slots)
+    return full + (ranks < rem)
+
+
 # ---------------------------------------------------------------------------
 # In-graph SST: shard_map push of every node's own row
 # ---------------------------------------------------------------------------

@@ -64,8 +64,8 @@ class SweepState:
 
 
 def sweep(state: SweepState, app_ready: Array, *, window=1 << 30,
-          null_send=True, receive_fn=None
-          ) -> Tuple[SweepState, Array]:
+          null_send=True, receive_fn=None, member_mask=None,
+          sender_mask=None) -> Tuple[SweepState, Array]:
     """One fused protocol round for every node simultaneously.
 
     app_ready: (S,) int32 — app messages each sender wants to publish this
@@ -76,24 +76,47 @@ def sweep(state: SweepState, app_ready: Array, *, window=1 << 30,
     the trace) or scalar arrays (traced) — the latter is what lets
     :func:`run_batch` vmap one compiled program over a window/flag grid.
 
-    receive_fn: optional ``(pub_vis, recv_counts) -> new recv_counts``
-    override for the receive predicate's consumption step.  The default is
-    the in-graph ``max`` merge; the pallas Group backend substitutes the
-    fused SMC slot-counter kernel here (same fixed point, evaluated over
-    the real ring data structure).
+    receive_fn: optional ``(pub_vis, recv_counts, valid) -> new
+    recv_counts`` override for the receive predicate's consumption step
+    (``valid`` is the (N, S) validity mask, or None when unpadded).  The
+    default is the in-graph ``max`` merge; the pallas Group backend
+    substitutes the fused SMC slot-counter kernel here (same fixed point,
+    evaluated over the real ring data structure).
+
+    member_mask/sender_mask: optional (N,)/(S,) bool validity masks for
+    padded stacked execution — padding must be a SUFFIX (real members are
+    positions 0..N_g-1, real senders ranks 0..S_g-1).  Masked slots never
+    publish, never receive, and never hold back any min-reduction; the
+    round-robin order is over the real sender count (a traced scalar), so
+    the active sub-array evolves bit-identically to an unpadded sweep.
 
     Returns (new_state, delivered_batch_sizes (N,)).
     """
     n_members = state.recv_counts.shape[0]
     n_senders = state.published.shape[0]
     ranks = jnp.arange(n_senders)
+    masked = member_mask is not None or sender_mask is not None
+    if masked:
+        member_mask = (jnp.ones(n_members, bool) if member_mask is None
+                       else jnp.asarray(member_mask))
+        sender_mask = (jnp.ones(n_senders, bool) if sender_mask is None
+                       else jnp.asarray(sender_mask))
+        s_eff = jnp.sum(sender_mask.astype(jnp.int32))
+        big = jnp.iinfo(jnp.int32).max
+
+        def prefix(counts):
+            return sst.rr_prefix_masked(counts, sender_mask, s_eff)
+    else:
+        prefix = sst.rr_prefix
 
     # --- receive predicate (all nodes): consume everything visible -------
     if receive_fn is None:
         recv_counts = jnp.maximum(state.recv_counts, state.pub_vis)
     else:
-        recv_counts = receive_fn(state.pub_vis, state.recv_counts)
-    received_num = (sst.rr_prefix(recv_counts) - 1).astype(jnp.int32)
+        valid = (member_mask[:, None] & sender_mask[None, :]) if masked \
+            else None
+        recv_counts = receive_fn(state.pub_vis, state.recv_counts, valid)
+    received_num = (prefix(recv_counts) - 1).astype(jnp.int32)
     received_num = jnp.maximum(received_num, state.received_num)
 
     # --- null predicate (sender nodes) -----------------------------------
@@ -102,6 +125,8 @@ def sweep(state: SweepState, app_ready: Array, *, window=1 << 30,
     else:
         sender_rows = recv_counts[:n_senders]                  # (S, S)
         have = sender_rows > 0
+        if masked:
+            have = have & sender_mask[None, :]
         tgt = nullsend.null_target(
             ranks[:, None], sender_rows - 1, ranks[None, :])
         tgt = jnp.where(have, tgt, 0)
@@ -112,28 +137,40 @@ def sweep(state: SweepState, app_ready: Array, *, window=1 << 30,
         nulls = jnp.where(app_ready > 0, 0, nulls)
         # traced flag (run_batch grids): a disabled point masks to zero
         nulls = jnp.where(jnp.asarray(null_send), nulls, 0)
+        if masked:
+            nulls = jnp.where(sender_mask, nulls, 0)
 
     # --- send predicate (sender nodes), ring-window capped ----------------
     diag = jnp.arange(n_members)
     deliv_vis_now = state.deliv_vis.at[diag, diag].set(state.delivered_num)
+    if masked:
+        deliv_vis_now = jnp.where(member_mask[None, :], deliv_vis_now, big)
     min_seq = deliv_vis_now.min(axis=1)[:n_senders]            # (S,)
-    deliv_counts = sst.sender_counts(min_seq + 1, n_senders)   # (S, S)
+    if masked:
+        deliv_counts = sst.sender_counts_masked(min_seq + 1, s_eff,
+                                                n_senders)     # (S, S)
+    else:
+        deliv_counts = sst.sender_counts(min_seq + 1, n_senders)
     own_deliv = deliv_counts[ranks, ranks]
     cap = own_deliv + window
     sendable = jnp.clip(cap - state.published, 0)
     app_pub = jnp.minimum(app_ready, sendable)
+    if masked:
+        app_pub = jnp.where(sender_mask, app_pub, 0)
     published = state.published + app_pub + nulls
 
     # own publishes are received locally immediately
     own = jnp.zeros_like(recv_counts).at[ranks, ranks].set(published)
     recv_counts = jnp.maximum(recv_counts, own)
     received_num = jnp.maximum(
-        received_num, (sst.rr_prefix(recv_counts) - 1).astype(jnp.int32))
+        received_num, (prefix(recv_counts) - 1).astype(jnp.int32))
 
     # --- delivery predicate: min over *visible* received_num --------------
     # own entry is authoritative; other members' entries lag one round
     recv_vis = state.recv_vis.at[diag, diag].set(received_num)
-    stable = recv_vis.min(axis=1)                              # (N,)
+    recv_vis_eff = jnp.where(member_mask[None, :], recv_vis, big) \
+        if masked else recv_vis
+    stable = recv_vis_eff.min(axis=1)                          # (N,)
     delivered_num = jnp.maximum(state.delivered_num, stable)
     batch = delivered_num - state.delivered_num
 
@@ -166,14 +203,16 @@ def run_rounds(state: SweepState, app_schedule: Array, *,
 
 
 def scan_rounds(state: SweepState, app_schedule: Array, *,
-                window=1 << 30, null_send=True, receive_fn=None
+                window=1 << 30, null_send=True, receive_fn=None,
+                member_mask=None, sender_mask=None
                 ) -> Tuple[SweepState, Tuple[Array, Array, Array]]:
     """lax.scan with a send-queue backlog and full per-round traces.
 
     Window-throttled messages are requeued, not dropped — the DES app-queue
     semantics the Group backends need.  app_schedule: (T, S) app messages
     becoming ready per round.  ``window``/``null_send`` may be traced
-    scalars (see :func:`sweep`).
+    scalars, and ``member_mask``/``sender_mask`` padded-validity masks
+    (see :func:`sweep`).
 
     Returns (final_state, (delivered_batches (T, N), app_published (T, S),
     nulls_published (T, S))) — everything delivery-log reconstruction and
@@ -185,7 +224,8 @@ def scan_rounds(state: SweepState, app_schedule: Array, *,
         st, backlog = carry
         want = backlog + ready
         new, batch = sweep(st, want, window=window, null_send=null_send,
-                           receive_fn=receive_fn)
+                           receive_fn=receive_fn, member_mask=member_mask,
+                           sender_mask=sender_mask)
         pub = new.app_sent - st.app_sent
         return (new, want - pub), (batch, pub,
                                    new.nulls_sent - st.nulls_sent)
@@ -195,31 +235,83 @@ def scan_rounds(state: SweepState, app_schedule: Array, *,
     return state, traces
 
 
-def run_batch(states: SweepState, app_schedules: Array, *, windows: Array,
-              null_sends: Array, receive_fn=None
-              ) -> Tuple[SweepState, Tuple[Array, Array, Array]]:
-    """Batched multi-scenario execution: vmap of :func:`scan_rounds`.
-
-    One compiled program sweeps B scenario points at once instead of B
-    sequential Python runs — the systematic-batching lesson (Sec. 3.1–3.2)
-    applied to the coordination substrate itself.
-
-    states: a SweepState whose leaves carry a leading (B,) axis (see
-    :func:`batch_states`); app_schedules: (B, T, S) schedules padded to a
-    common round budget; windows: (B,) int32 ring windows; null_sends:
-    (B,) bool flags.  Returns batched final states and (B, T, ...) traces.
-    """
-    def one(st, sched, w, nf):
-        return scan_rounds(st, sched, window=w, null_send=nf,
-                           receive_fn=receive_fn)
-
-    return jax.vmap(one)(states, app_schedules, jnp.asarray(windows),
-                         jnp.asarray(null_sends))
-
-
 def batch_states(n_members: int, n_senders: int, batch: int) -> SweepState:
-    """A fresh SweepState broadcast over a leading (B,) axis, the carry
-    layout :func:`run_batch` expects."""
+    """A fresh SweepState broadcast over a leading (B,) axis — the carry
+    layout :func:`run_stacked` expects over its subgroup axis (and, with a
+    second broadcast, :func:`run_stacked_batch` over (B, G))."""
     state = SweepState.init(n_members, n_senders)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (batch,) + x.shape), state)
+
+
+# ---------------------------------------------------------------------------
+# Stacked multi-subgroup execution (paper Sec. 2.4, taken across subgroups)
+# ---------------------------------------------------------------------------
+#
+# A whole group — G subgroups padded to a common (N_max, S_max) with
+# validity masks — sweeps as ONE program: vmap over the subgroup axis of
+# the masked scan.  The subgroups are protocol-independent, so each padded
+# lane evolves bit-identically to its own unpadded run; the Group backends
+# slice each subgroup's traces back to its own round budget afterwards.
+
+def run_stacked(states: SweepState, app_schedules: Array, *, windows: Array,
+                null_send, member_masks=None, sender_masks=None,
+                receive_fn=None
+                ) -> Tuple[SweepState, Tuple[Array, Array, Array]]:
+    """All G subgroups of one group scenario in a single fused scan.
+
+    states: SweepState with leading (G,) leaves over the padded
+    (N_max, S_max) shape (see :func:`batch_states`); app_schedules:
+    (G, T, S_max) padded schedules; windows: (G,) int32 per-subgroup ring
+    windows; null_send: one scalar flag (a group-level setting — traced
+    OK); member_masks/sender_masks: (G, N_max)/(G, S_max) bool validity,
+    or None when every subgroup already fills the padded shape (a
+    homogeneous stack skips the masked arithmetic entirely).
+    Returns stacked final states and (G, T, ...) traces.
+    """
+    if member_masks is None and sender_masks is None:
+        def one_unmasked(st, sched, w):
+            return scan_rounds(st, sched, window=w, null_send=null_send,
+                               receive_fn=receive_fn)
+
+        return jax.vmap(one_unmasked)(states, app_schedules,
+                                      jnp.asarray(windows))
+
+    g, n_max = states.recv_counts.shape[0], states.recv_counts.shape[1]
+    s_max = states.published.shape[1]
+    if member_masks is None:
+        member_masks = jnp.ones((g, n_max), bool)
+    if sender_masks is None:
+        sender_masks = jnp.ones((g, s_max), bool)
+
+    def one(st, sched, w, mm, sm):
+        return scan_rounds(st, sched, window=w, null_send=null_send,
+                           receive_fn=receive_fn, member_mask=mm,
+                           sender_mask=sm)
+
+    return jax.vmap(one)(states, app_schedules, jnp.asarray(windows),
+                         jnp.asarray(member_masks),
+                         jnp.asarray(sender_masks))
+
+
+def run_stacked_batch(states: SweepState, app_schedules: Array, *,
+                      windows: Array, null_sends: Array, member_masks=None,
+                      sender_masks=None, receive_fn=None
+                      ) -> Tuple[SweepState, Tuple[Array, Array, Array]]:
+    """B scenario points x G subgroups as one doubly-batched program.
+
+    states: SweepState with leading (B, G) leaves; app_schedules:
+    (B, G, T, S_max); windows: (B, G) int32; null_sends: (B,) bool; masks:
+    (G, N_max)/(G, S_max) shared across points (run_batch grids never vary
+    membership shapes), or None for a homogeneous unpadded stack.  The
+    caller may shard the leading B axis across devices (see
+    :mod:`repro.core.placement`) — every point is independent, so the
+    program is embarrassingly data-parallel.
+    """
+    def point(st, sched, w, nf):
+        return run_stacked(st, sched, windows=w, null_send=nf,
+                           member_masks=member_masks,
+                           sender_masks=sender_masks, receive_fn=receive_fn)
+
+    return jax.vmap(point)(states, app_schedules, jnp.asarray(windows),
+                           jnp.asarray(null_sends))

@@ -109,13 +109,14 @@ def smc_sweep(counters, processed, *, block_senders: int = 8):
                                 interpret=_interpret())
 
 
-def smc_sweep_watermark(published, processed, *, window: int,
+def smc_sweep_watermark(published, processed, *, window: int, valid=None,
                         block_senders: int = 8):
     """Receive sweep from published watermarks only — the counter ring is
     rebuilt inside the kernel tile, so no (S, W) array is materialized
     (see kernels.smc_sweep).  The Group ``pallas`` backend's per-round
-    receive predicate."""
+    receive predicate.  ``valid`` masks padded (member, sender) lanes in
+    stacked multi-subgroup execution."""
     return _ss.smc_sweep_watermark_pallas(published, processed,
-                                          window=window,
+                                          window=window, valid=valid,
                                           block_senders=block_senders,
                                           interpret=_interpret())

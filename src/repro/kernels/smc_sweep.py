@@ -61,19 +61,40 @@ def _sweep_kernel(counters_ref, processed_ref, visible_ref, *, window: int):
                                                    window)
 
 
-def _watermark_kernel(published_ref, processed_ref, visible_ref, *,
-                      window: int):
-    """Receive sweep with the counter tile rebuilt in-kernel from the
-    published watermark (see :func:`counters_from_counts` for the ring
-    state being reproduced) — no (S, W) array crosses HBM."""
-    published = published_ref[...]                # (bs,) int32
-    processed = processed_ref[...]                # (bs,) int32
+def _watermark_run(published, processed, window: int):
+    """Shared tile core of the watermark kernels: rebuild the counter tile
+    in-registers from the published watermark (see
+    :func:`counters_from_counts` for the ring state being reproduced — no
+    (S, W) array crosses HBM) and return the contiguous visible run."""
     bs = published.shape[0]
     slots = jax.lax.broadcasted_iota(jnp.int32, (bs, window), 1)
     pub = published[:, None]
     counters = jnp.where(pub > slots, (pub - 1 - slots) // window, -1)
-    visible_ref[...] = processed + _contiguous_run(counters, processed,
-                                                   window)
+    return _contiguous_run(counters, processed, window)
+
+
+def _watermark_kernel(published_ref, processed_ref, visible_ref, *,
+                      window: int):
+    """Receive sweep from published watermarks, ring rebuilt in-kernel."""
+    published = published_ref[...]                # (bs,) int32
+    processed = processed_ref[...]                # (bs,) int32
+    visible_ref[...] = processed + _watermark_run(published, processed,
+                                                  window)
+
+
+def _watermark_masked_kernel(published_ref, processed_ref, valid_ref,
+                             visible_ref, *, window: int):
+    """:func:`_watermark_kernel` with an explicit per-lane validity mask —
+    the stacked multi-subgroup path flattens a padded (member, sender)
+    plane into the lane axis, so padded member rows AND padded sender
+    ranks arrive here as lanes whose ring must stay untouched.  An invalid
+    lane returns ``processed`` unchanged (no advancement), whatever its
+    published watermark holds."""
+    published = published_ref[...]                # (bs,) int32
+    processed = processed_ref[...]                # (bs,) int32
+    valid = valid_ref[...]                        # (bs,) int32 (0/1)
+    run = _watermark_run(published, processed, window)
+    visible_ref[...] = processed + jnp.where(valid > 0, run, 0)
 
 
 def counters_from_counts(published, window: int):
@@ -130,26 +151,37 @@ def smc_sweep_pallas(counters, processed, *, block_senders: int = 8,
 
 
 def smc_sweep_watermark_pallas(published, processed, *, window: int,
-                               block_senders: int = 8, interpret=None):
+                               valid=None, block_senders: int = 8,
+                               interpret=None):
     """published/processed: (S,) int32 -> visible counts (S,).
 
     Same fixed point as :func:`smc_sweep_pallas` over
     :func:`counters_from_counts`, but the ring tile lives only inside the
     kernel: HBM traffic per call is O(S), not O(S*W).  This is what the
     ``pallas`` Group backend scans every protocol round.
+
+    ``valid`` (optional, (S,) bool/int): per-lane validity for stacked
+    padded execution.  The lane axis here is really a flattened
+    (member, sender) plane when driven by the Group backends, so the mask
+    covers member-axis padding as well as sender-axis padding: an invalid
+    lane's result is its ``processed`` count unchanged.  (The internal
+    block padding below is the third, kernel-private padding level.)
     """
-    (published, processed), s, sp = _pad_senders(
-        [jnp.asarray(published, jnp.int32), jnp.asarray(processed, jnp.int32)],
-        block_senders, pad_values=(0, 0))
+    operands = [jnp.asarray(published, jnp.int32),
+                jnp.asarray(processed, jnp.int32)]
+    kernel = _watermark_kernel
+    if valid is not None:
+        operands.append(jnp.asarray(valid, jnp.int32))
+        kernel = _watermark_masked_kernel
+    operands, s, sp = _pad_senders(operands, block_senders,
+                                   pad_values=(0,) * len(operands))
+    lane_spec = pl.BlockSpec((block_senders,), lambda i: (i,))
     out = pl.pallas_call(
-        functools.partial(_watermark_kernel, window=window),
+        functools.partial(kernel, window=window),
         grid=(sp // block_senders,),
-        in_specs=[
-            pl.BlockSpec((block_senders,), lambda i: (i,)),
-            pl.BlockSpec((block_senders,), lambda i: (i,)),
-        ],
-        out_specs=pl.BlockSpec((block_senders,), lambda i: (i,)),
+        in_specs=[lane_spec] * len(operands),
+        out_specs=lane_spec,
         out_shape=jax.ShapeDtypeStruct((sp,), jnp.int32),
         interpret=_auto_interpret(interpret),
-    )(published, processed)
+    )(*operands)
     return out[:s]

@@ -1,0 +1,42 @@
+"""Suite-wide guardrails.
+
+Skip budget: at most the four hypothesis-based property modules may skip
+(they ``importorskip`` and only skip in environments without hypothesis —
+e.g. the hermetic eval container; CI installs requirements.txt, so there
+it is 0 skips).  A new test that sneaks in another ``importorskip`` (or
+an environment-dependent skip) would silently shrink coverage; instead
+of letting that rot, any pytest run (local or CI) FAILS when more than
+``PYTEST_SKIP_BUDGET`` (default 4) tests/modules skip.  New property
+tests must use seeded RNG loops instead of hypothesis (see
+tests/test_stacked.py, tests/test_hotpath.py).
+"""
+
+import os
+
+_SKIP_BUDGET = int(os.environ.get("PYTEST_SKIP_BUDGET", "4"))
+_skipped = []
+
+
+def pytest_runtest_logreport(report):
+    if report.skipped:
+        _skipped.append(report.nodeid)
+
+
+def pytest_collectreport(report):
+    if report.skipped:
+        _skipped.append(str(report.nodeid))
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    if len(_skipped) > _SKIP_BUDGET:
+        terminalreporter.write_line(
+            f"skip budget exceeded: {len(_skipped)} skips > budget of "
+            f"{_SKIP_BUDGET} (set PYTEST_SKIP_BUDGET to override):",
+            red=True)
+        for nodeid in _skipped:
+            terminalreporter.write_line(f"  skipped: {nodeid}", red=True)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if int(exitstatus) == 0 and len(_skipped) > _SKIP_BUDGET:
+        session.exitstatus = 1

@@ -232,6 +232,41 @@ def test_smc_watermark_kernel_matches_materialized_ring(s, w):
     np.testing.assert_array_equal(np.asarray(via_watermark), published)
 
 
+@pytest.mark.parametrize("s,w", [(8, 16), (5, 32), (13, 8)])
+def test_smc_watermark_kernel_validity_mask(s, w):
+    """Member/sender-axis padding in the stacked path arrives at the
+    kernel as a flattened lane mask: invalid lanes return ``processed``
+    unchanged — whatever garbage their published watermark holds — while
+    valid lanes are bit-identical to the unmasked kernel."""
+    from repro.kernels import smc_sweep as ss
+    rng = np.random.default_rng(17)
+    processed = rng.integers(0, 50, size=s)
+    published = processed + rng.integers(0, w + 1, size=s)
+    valid = rng.integers(0, 2, size=s).astype(bool)
+    # poison invalid lanes: advancement there would corrupt padded slots
+    published = np.where(valid, published, processed + w)
+    got = ss.smc_sweep_watermark_pallas(
+        jnp.asarray(published), jnp.asarray(processed), window=w,
+        valid=jnp.asarray(valid), interpret=True)
+    want = np.where(valid, published, processed)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_smc_watermark_kernel_full_mask_matches_unmasked():
+    from repro.kernels import smc_sweep as ss
+    rng = np.random.default_rng(19)
+    s, w = 7, 16
+    processed = rng.integers(0, 20, size=s)
+    published = processed + rng.integers(0, w + 1, size=s)
+    masked = ss.smc_sweep_watermark_pallas(
+        jnp.asarray(published), jnp.asarray(processed), window=w,
+        valid=jnp.ones(s, bool), interpret=True)
+    plain = ss.smc_sweep_watermark_pallas(
+        jnp.asarray(published), jnp.asarray(processed), window=w,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(plain))
+
+
 # ---------------------------------------------------------------------------
 # model integration: pallas impl == xla impl end to end
 # ---------------------------------------------------------------------------
