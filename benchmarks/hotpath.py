@@ -16,6 +16,14 @@ are simulated-time):
   ONE stacked compiled program for all topics vs 16 sequential
   single-topic runs, asserting per-topic delivery logs are byte-identical.
   This is the Derecho/DDS-style workload the stacked refactor targets.
+* ``serve_fanout``  — the serve plane riding the substrate: G replica
+  decode engines (a tiny real dense model) publishing every round's
+  admissions + tokens through `Domain.bind`'s streamed stacked program
+  (repro.serve.fanout.ReplicatedEngine).  ``cold_s`` includes the decode
+  jit + the stream trace; ``warm_s`` (best-of-3, engines reset between
+  runs) is the steady-state serve+multicast cost, with ``tok_per_s_warm``
+  the wall-clock token rate and ``one_program`` asserting the whole run
+  appended a single TRACE_EVENTS entry.
 
 Writes ``BENCH_hotpath.json`` at the repo root (committed — the perf
 baseline later PRs regress against).  ``--smoke`` runs tiny shapes and
@@ -54,9 +62,11 @@ PRE_PR = {
 FULL = dict(n=8, senders=4, msgs=150, window=32)
 FULL_GRID = (4, 8, 16, 24, 32, 48, 64, 100)
 FULL_TOPICS = dict(n_nodes=8, n_topics=16, samples=40)
+FULL_SERVE = dict(replicas=2, slots=3, reqs=5, prompt=4, new_tokens=6)
 SMOKE = dict(n=4, senders=2, msgs=24, window=8)
 SMOKE_GRID = (4, 6, 8, 12)
 SMOKE_TOPICS = dict(n_nodes=4, n_topics=16, samples=6)
+SMOKE_SERVE = dict(replicas=2, slots=2, reqs=3, prompt=3, new_tokens=4)
 
 # --smoke regression gate: fail when current > 3x baseline + slack.  The
 # slack absorbs CI-runner jitter on the millisecond-scale warm metrics but
@@ -183,17 +193,91 @@ def bench_many_topics(shape, backend="graph"):
     }
 
 
-def run_suite(shape, grid, topics):
+_SERVE_ARCH = "hotpath-serve"
+
+
+def _serve_engines(shape):
+    """G fresh replica engines of a tiny REAL dense model (compiled decode
+    is cached per engine; reset() between runs keeps it warm)."""
+    import jax
+    from repro.models import layers, registry
+    from repro.models.config import ModelConfig
+    from repro.models.runtime import Runtime
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    cfg = ModelConfig(name=_SERVE_ARCH, family="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=512, head_dim=32, tie_embeddings=True)
+    registry.register(_SERVE_ARCH, lambda: cfg)   # idempotent overwrite
+    params = layers.init_tree(registry.param_specs(cfg), jax.random.key(0))
+    return [ServeEngine(_SERVE_ARCH, params, cfg,
+                        EngineConfig(max_batch=shape["slots"], max_len=64),
+                        Runtime())
+            for _ in range(shape["replicas"])], cfg
+
+
+def bench_serve_fanout(shape, backend="graph"):
+    """The serve plane on the stacked substrate: cold (decode jit + stream
+    trace) vs warm engine-round loop, one compiled program per run."""
+    from repro.core.group import TRACE_EVENTS
+    from repro.serve.engine import Request
+    from repro.serve.fanout import ReplicatedEngine
+
+    engines, cfg = _serve_engines(shape)
+
+    def run_once(rep):
+        rep.reset()
+        rng = np.random.default_rng(0)
+        for g in range(shape["replicas"]):
+            for i in range(shape["reqs"]):
+                rep.submit(g, Request(
+                    rid=g * 100 + i,
+                    prompt=rng.integers(0, cfg.vocab_size, shape["prompt"],
+                                        dtype=np.int32),
+                    max_new_tokens=shape["new_tokens"]))
+        t0 = time.perf_counter()
+        report = rep.run()
+        return time.perf_counter() - t0, report
+
+    rep = ReplicatedEngine(engines, subscribers_per_replica=2, window=4,
+                           backend=backend)
+    n0 = len(TRACE_EVENTS)
+    cold, report = run_once(rep)
+    # at most one stacked trace for a whole run (0 if this scenario
+    # shape's program is already cached in-process) — never one per
+    # engine round or per replica topic
+    one_program = (len(TRACE_EVENTS) - n0) <= 1
+    warm, tok_s = float("inf"), 0.0
+    for _ in range(3):
+        w, report = run_once(rep)
+        if w < warm:
+            warm, tok_s = w, report.extras["serve"]["tokens_per_s"]
+    serve = report.extras["serve"]
+    return {
+        "replicas": shape["replicas"],
+        "slots": shape["slots"],
+        "cold_s": round(cold, 4),
+        "warm_s": round(warm, 4),
+        "tok_per_s_warm": round(tok_s, 1),
+        "tokens": serve["tokens"],
+        "engine_rounds": serve["engine_rounds"],
+        "rdma_writes": report.rdma_writes,
+        "one_program": bool(one_program),
+    }
+
+
+def run_suite(shape, grid, topics, serve):
     return {
         "repeated_run_graph": bench_repeated_run(shape, "graph"),
         "repeated_run_pallas": bench_repeated_run(shape, "pallas"),
         "window_grid_graph": bench_window_grid(shape, grid, "graph"),
         "many_topics_graph": bench_many_topics(topics, "graph"),
+        "serve_fanout": bench_serve_fanout(serve, "graph"),
     }
 
 
 def smoke_gate(baseline_path: Path) -> int:
-    results = run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS)
+    results = run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS, SMOKE_SERVE)
     if not baseline_path.exists():
         print(f"no baseline at {baseline_path}; smoke measured only")
         print(json.dumps(results, indent=1))
@@ -203,7 +287,8 @@ def smoke_gate(baseline_path: Path) -> int:
     for bench, metric in (("repeated_run_graph", "warm_s"),
                           ("repeated_run_pallas", "warm_s"),
                           ("window_grid_graph", "batch_s"),
-                          ("many_topics_graph", "stacked_warm_s")):
+                          ("many_topics_graph", "stacked_warm_s"),
+                          ("serve_fanout", "warm_s")):
         cur = results[bench][metric]
         ref = base.get(bench, {}).get(metric)
         if ref is None:
@@ -218,6 +303,9 @@ def smoke_gate(baseline_path: Path) -> int:
         if not results[bench]["logs_identical"]:
             print(f"{bench}: batched/stacked logs DIVERGE from sequential")
             failures.append(f"{bench}.logs_identical")
+    if not results["serve_fanout"]["one_program"]:
+        print("serve_fanout: a run compiled more than one stacked program")
+        failures.append("serve_fanout.one_program")
     if failures:
         print(f"bench-smoke FAILED: {failures}")
         return 1
@@ -235,12 +323,14 @@ def main() -> int:
         return smoke_gate(args.json)
     record = {
         "pre_pr_baseline": PRE_PR,
-        "full": run_suite(FULL, FULL_GRID, FULL_TOPICS),
-        "smoke": run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS),
+        "full": run_suite(FULL, FULL_GRID, FULL_TOPICS, FULL_SERVE),
+        "smoke": run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS, SMOKE_SERVE),
         "scenario": {"full": {**FULL, "grid": list(FULL_GRID),
-                              "topics": dict(FULL_TOPICS)},
+                              "topics": dict(FULL_TOPICS),
+                              "serve": dict(FULL_SERVE)},
                      "smoke": {**SMOKE, "grid": list(SMOKE_GRID),
-                               "topics": dict(SMOKE_TOPICS)}},
+                               "topics": dict(SMOKE_TOPICS),
+                               "serve": dict(SMOKE_SERVE)}},
     }
     full = record["full"]
     full["vs_pre_pr"] = {
@@ -262,7 +352,9 @@ def main() -> int:
           and full["window_grid_graph"]["speedup_batch"] > 1
           and full["window_grid_graph"]["logs_identical"]
           and full["many_topics_graph"]["speedup_stacked"] > 1
-          and full["many_topics_graph"]["logs_identical"])
+          and full["many_topics_graph"]["logs_identical"]
+          and full["serve_fanout"]["one_program"]
+          and full["serve_fanout"]["tok_per_s_warm"] > 0)
     print("acceptance:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

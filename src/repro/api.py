@@ -13,6 +13,12 @@ One import gives the Derecho-style session API::
     # compiled program (graph/pallas) — see README "Performance"
     reports = g.run_batch(backend="graph", windows=[5, 20, 100, 500])
 
+    # streaming execution: per-round message counts in, one stacked
+    # program per round (the serve plane's entry point — DESIGN.md Sec. 6)
+    stream = g.stream(backend="graph")
+    stream.step(ready)                   # (G, S_max) counts this round
+    report, logs = stream.finish()
+
 Everything here is a re-export; the implementations live in
 :mod:`repro.core.group` (the façade + backends + the compile-once scan
 program cache), :mod:`repro.core.simulator` (flags/specs + the DES),
@@ -21,21 +27,27 @@ program cache), :mod:`repro.core.simulator` (flags/specs + the DES),
 """
 
 from repro.core.costmodel import HOST_X86, RDMA_CX6, TPU_ICI
-from repro.core.dds import (Domain, QoS, Topic, many_topic_domain,
-                            single_topic_domain)
+from repro.core.dds import (BoundDomain, Domain, QoS, Topic,
+                            many_topic_domain, single_topic_domain)
 from repro.core.group import (BACKENDS, Delivery, DeliveryLog, DESBackend,
-                              GraphBackend, Group, GroupConfig,
+                              GraphBackend, Group, GroupConfig, GroupStream,
                               PallasBackend, ProtocolBackend, RunReport,
-                              SenderPattern, SpindleFlags, SubgroupHandle,
-                              SubgroupSpec, get_backend, register_backend,
-                              single_group)
+                              SenderPattern, SpindleFlags, StreamView,
+                              SubgroupHandle, SubgroupSpec, get_backend,
+                              register_backend, single_group)
 from repro.core.views import MembershipService, View
 
+# The serve-plane fan-out (repro.serve.fanout.ReplicatedEngine) is NOT
+# re-exported here: it pulls in the model zoo, and repro.api stays a
+# protocol-plane import.  ``from repro.serve.fanout import
+# ReplicatedEngine`` is the serving entry point (DESIGN.md Sec. 6).
+
 __all__ = [
-    "BACKENDS", "DESBackend", "Delivery", "DeliveryLog", "Domain",
-    "GraphBackend", "Group", "GroupConfig", "HOST_X86", "MembershipService",
-    "PallasBackend", "ProtocolBackend", "QoS", "RDMA_CX6", "RunReport",
-    "SenderPattern", "SpindleFlags", "SubgroupHandle", "SubgroupSpec",
-    "TPU_ICI", "Topic", "View", "get_backend", "many_topic_domain",
-    "register_backend", "single_group", "single_topic_domain",
+    "BACKENDS", "BoundDomain", "DESBackend", "Delivery", "DeliveryLog",
+    "Domain", "GraphBackend", "Group", "GroupConfig", "GroupStream",
+    "HOST_X86", "MembershipService", "PallasBackend", "ProtocolBackend",
+    "QoS", "RDMA_CX6", "RunReport", "SenderPattern", "SpindleFlags",
+    "StreamView", "SubgroupHandle", "SubgroupSpec", "TPU_ICI", "Topic",
+    "View", "get_backend", "many_topic_domain", "register_backend",
+    "single_group", "single_topic_domain",
 ]

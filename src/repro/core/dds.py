@@ -25,6 +25,8 @@ import enum
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core import simulator as sim
 
 
@@ -130,6 +132,23 @@ class Domain:
             flags=flags, target_delivered=target_delivered, **kw)
         return group_mod.Group(cfg)
 
+    def bind(self, *, backend: str = "graph", spindle: bool = True,
+             **kw) -> "BoundDomain":
+        """Open a STREAMING session over this domain: per-round
+        per-publisher sample counts in, one stacked compiled program per
+        round (DESIGN.md Sec. 6).
+
+        Where :meth:`group` fixes ``samples_per_publisher`` upfront (a
+        benchmark-scenario schedule), a bound domain accepts each round's
+        message counts as they happen — the data plane for workloads
+        whose publish pattern only exists at runtime, e.g. the serve
+        fan-out (:mod:`repro.serve.fanout`).  All topics still lower to
+        ONE stacked program; every streamed round is a single dispatch
+        across every topic.
+        """
+        g = self.group(samples_per_publisher=0, spindle=spindle, **kw)
+        return BoundDomain(self, g.stream(backend=backend))
+
     def sim_config(self, *, samples_per_publisher: int = 1000,
                    spindle: bool = True,
                    target_delivered: Optional[int] = None,
@@ -152,6 +171,60 @@ class Domain:
         g = self.group(samples_per_publisher=samples_per_publisher,
                        spindle=spindle, target_delivered=target_delivered)
         return g.cfg.to_sim_config(**kw)
+
+
+@dataclasses.dataclass
+class BoundDomain:
+    """A domain bound to a :class:`repro.core.group.GroupStream`: the
+    topic-name-keyed front of the streaming entry point.
+
+    ``push_round({topic_name: per_publisher_counts})`` publishes one
+    round of samples (topics omitted from the mapping publish nothing
+    that round — the null-send scheme covers their publishers) and
+    returns the :class:`repro.core.group.StreamView` watermarks;
+    ``finish()`` drains and returns the unified report plus per-TOPIC
+    delivery logs keyed by topic name.
+    """
+
+    domain: Domain
+    stream: "object"                     # repro.core.group.GroupStream
+
+    def __post_init__(self):
+        self._gid = {t.name: g for g, t in enumerate(self.domain.topics)}
+
+    @property
+    def round(self) -> int:
+        return self.stream.rounds
+
+    def push_round(self, counts_by_topic=None):
+        """One streamed round.  ``counts_by_topic`` maps topic name ->
+        per-publisher sample counts (a scalar broadcasts over the topic's
+        publishers; a sequence gives rank-ordered per-publisher counts,
+        publisher order as declared in :meth:`Domain.create_topic`)."""
+        ready = np.zeros(self.stream.shape, np.int32)
+        for name, counts in (counts_by_topic or {}).items():
+            if name not in self._gid:
+                raise KeyError(f"unknown topic {name!r}; have "
+                               f"{sorted(self._gid)}")
+            gid = self._gid[name]
+            n_pub = len(self.domain.topics[gid].publishers)
+            counts = np.asarray(counts, np.int32)
+            if counts.ndim == 0:
+                counts = np.full(n_pub, int(counts), np.int32)
+            if counts.shape != (n_pub,):
+                raise ValueError(
+                    f"topic {name!r} has {n_pub} publishers, got counts "
+                    f"of shape {counts.shape}")
+            ready[gid, :n_pub] = counts
+        return self.stream.step(ready)
+
+    def finish(self, settle_max=None):
+        """Drain to quiescence; returns ``(RunReport, {topic_name:
+        DeliveryLog})``."""
+        report, logs = self.stream.finish(settle_max=settle_max)
+        named = {t.name: logs[g]
+                 for g, t in enumerate(self.domain.topics) if g in logs}
+        return report, named
 
 
 # Module-level so the once-ness survives Domain instances; tests reset it.

@@ -52,6 +52,7 @@ import numpy as np
 from repro.core import costmodel, delivery as delivery_mod
 from repro.core import placement as placement_mod
 from repro.core import simulator as sim
+from repro.core import sst
 from repro.core import sweep as sweep_mod
 from repro.core import views as views_mod
 
@@ -488,6 +489,18 @@ class Group:
             reports.append(report)
         return reports
 
+    def stream(self, backend="graph") -> "GroupStream":
+        """Open a streaming session over this scenario: feed per-round
+        per-sender app-message counts with :meth:`GroupStream.step` (all
+        G subgroups sweep as ONE stacked compiled program per round) and
+        close with :meth:`GroupStream.finish` for the same
+        :class:`RunReport`/delivery logs a scheduled run produces.  This
+        is the serve-plane entry point (DESIGN.md Sec. 6): message
+        arrivals that only exist at runtime — a decode loop's admissions
+        and emitted tokens — ride the multicast substrate round by
+        round instead of as a precomputed schedule."""
+        return GroupStream(self, backend)
+
     def _fire_upcalls(self):
         for gid, fns in self._upcalls.items():
             log = self.delivery_logs.get(gid)
@@ -783,6 +796,32 @@ def _batch_program(members: Tuple[int, ...], senders: Tuple[int, ...],
 
     if n_shards > 1:
         fn = placement_mod.shard_over_batch(fn, n_shards, n_batched_args=4)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_program(members: Tuple[int, ...], senders: Tuple[int, ...],
+                    windows: Tuple[int, ...], null_send: bool,
+                    backend: str):
+    """Compile-once STREAMING program: ONE protocol round for all G
+    subgroups of a scenario shape, carrying (states, backlogs) across
+    calls.  Same static key and same padded/masked stacking as
+    :func:`_scan_program`; the round arithmetic is the scan body itself
+    (:func:`repro.core.sweep.step_backlog`), so T streamed rounds are
+    bit-identical to one T-round scan fed the same ready rows.  A whole
+    streamed session — however many rounds — traces exactly once."""
+    ring = max(windows) if backend == "pallas" else 0
+    receive_fn = _kernel_receive(ring) if backend == "pallas" else None
+    member_masks, sender_masks = _stack_masks(members, senders)
+    win_arr = np.asarray(windows, np.int32)
+
+    def fn(states, backlogs, ready):
+        TRACE_EVENTS.append((members, senders, backend))
+        return sweep_mod.stream_stacked(
+            states, backlogs, ready, windows=win_arr, null_send=null_send,
+            member_masks=member_masks, sender_masks=sender_masks,
+            receive_fn=receive_fn)
+
     return jax.jit(fn)
 
 
@@ -1139,6 +1178,238 @@ class PallasBackend(GraphBackend):
     :func:`_kernel_receive` via the cached scan programs."""
 
     name = "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Streaming execution — per-round message counts on the stacked substrate
+# ---------------------------------------------------------------------------
+
+
+def _trees_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamView:
+    """Host-side watermark snapshot after one streamed round.
+
+    ``delivered_num[g, m]`` is member position ``m``'s highest delivered
+    total-order seq in subgroup ``g``; ``published[g, s]`` sender rank
+    ``s``'s total publishes (apps + nulls); ``backlog[g, s]`` its
+    window-throttled still-queued app messages.  Padded lanes beyond a
+    subgroup's real ``n_members``/``n_senders`` carry garbage — always
+    slice with the per-subgroup sizes (as the helpers here do).
+    """
+
+    round: int
+    delivered_num: np.ndarray            # (G, N_max)
+    published: np.ndarray                # (G, S_max)
+    backlog: np.ndarray                  # (G, S_max)
+    n_members: Tuple[int, ...]
+    n_senders: Tuple[int, ...]
+    # the round's publish trace (None on a bare GroupStream.view() —
+    # only a step() carries what it just published)
+    app_pub: Optional[np.ndarray] = None     # (G, S_max)
+    nulls: Optional[np.ndarray] = None       # (G, S_max)
+
+    def sender_delivered(self, gid: int) -> np.ndarray:
+        """(S_g,) — how many of each sender rank's publishes (apps and
+        nulls) EVERY real member of subgroup ``gid`` has delivered: the
+        per-sender delivery watermark (seq ``i*S + s`` delivered means
+        sender ``s``'s first ``i+1`` publishes are)."""
+        n_g, s_g = self.n_members[gid], self.n_senders[gid]
+        d = int(self.delivered_num[gid, :n_g].min())
+        ranks = np.arange(s_g)
+        return np.where(d >= ranks, (d - ranks) // s_g + 1, 0)
+
+    def sender_drained(self, gid: int) -> np.ndarray:
+        """(S_g,) bool — sender rank has no queued backlog and every one
+        of its publishes so far is delivered at every member of ``gid``
+        (the slot-free condition of the serve plane)."""
+        s_g = self.n_senders[gid]
+        return ((self.backlog[gid, :s_g] == 0)
+                & (self.sender_delivered(gid)
+                   >= self.published[gid, :s_g]))
+
+
+class GroupStream:
+    """Streaming execution of one :class:`Group` scenario.
+
+    Where :meth:`Group.run` lowers a fixed per-sender message count to a
+    schedule upfront, a stream accepts the (G, S_max) app-message counts
+    of each round as they happen — the entry point for workloads whose
+    send pattern only exists at runtime (the serve plane's decode loop,
+    DESIGN.md Sec. 6).  Every :meth:`step` sweeps ALL subgroups as the
+    same ONE stacked compiled program (cached per scenario shape in
+    :func:`_stream_program`; the first round traces, every later round is
+    pure dispatch — a whole session appends exactly one
+    :data:`TRACE_EVENTS` entry) and returns the :class:`StreamView`
+    watermarks the caller can gate on.  :meth:`finish` drains to
+    quiescence and post-processes the accumulated round traces through
+    the exact :class:`GraphBackend` machinery scheduled runs use, so the
+    resulting :class:`RunReport` and delivery logs are comparable
+    like-for-like with ``run``/``run_batch`` (graph and pallas streams
+    fed identical rounds are bit-identical)."""
+
+    def __init__(self, group: Group, backend="graph"):
+        be = get_backend(backend)
+        if not isinstance(be, GraphBackend):
+            raise ValueError(
+                "streaming runs on the stacked graph/pallas substrate; "
+                f"got {getattr(be, 'name', backend)!r}")
+        cfg = group.cfg
+        if not cfg.subgroups:
+            raise ValueError("no subgroups")
+        self.group = group
+        self.backend = be
+        self._n = tuple(len(s.members) for s in cfg.subgroups)
+        self._s = tuple(len(s.senders) for s in cfg.subgroups)
+        self._w = tuple(s.window for s in cfg.subgroups)
+        self.n_max, self.s_max = max(self._n), max(self._s)
+        self._program = _stream_program(self._n, self._s, self._w,
+                                        cfg.flags.null_send, be.name)
+        self._states = sweep_mod.batch_states(self.n_max, self.s_max,
+                                              len(self._n))
+        self._backlogs = jnp.zeros((len(self._n), self.s_max), jnp.int32)
+        self._costs = np.stack([_cost_params(cfg, spec)
+                                for spec in cfg.subgroups]).astype(
+                                    np.float32)
+        self._enqueued = [np.zeros(s, np.int64) for s in self._s]
+        # running per-sender publish totals, kept host-side so watermark
+        # queries (app_publish_index) answer the common "not published
+        # yet" case in O(1) instead of re-scanning the round traces
+        self._app_cum = np.zeros((len(self._n), self.s_max), np.int64)
+        self._pub_cum = np.zeros((len(self._n), self.s_max), np.int64)
+        self._batches: List[np.ndarray] = []
+        self._app_pub: List[np.ndarray] = []
+        self._nulls: List[np.ndarray] = []
+        self._wall0 = time.perf_counter()
+        self.rounds = 0
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        """(G, S_max) — what :meth:`step` expects."""
+        return len(self._n), self.s_max
+
+    def step(self, ready) -> StreamView:
+        """One protocol round: ``ready[g, s]`` app messages become ready
+        at sender rank ``s`` of subgroup ``g`` (padded lanes must be 0).
+        Window-throttled messages are carried in the backlog, exactly as
+        the scheduled scan does."""
+        ready = np.asarray(ready, np.int32)
+        if ready.shape != self.shape:
+            raise ValueError(f"ready must be {self.shape}, got "
+                             f"{ready.shape}")
+        for g, s_g in enumerate(self._s):
+            if ready[g, s_g:].any():
+                raise ValueError(
+                    f"subgroup {g} has {s_g} senders but ready names "
+                    f"padded lanes {np.nonzero(ready[g, s_g:])[0] + s_g}")
+            self._enqueued[g] += ready[g, :s_g].astype(np.int64)
+        (self._states, self._backlogs), (batch, pub, nulls) = \
+            self._program(self._states, self._backlogs, jnp.asarray(ready))
+        pub, nulls = np.asarray(pub), np.asarray(nulls)
+        self._batches.append(np.asarray(batch))
+        self._app_pub.append(pub)
+        self._nulls.append(nulls)
+        self._app_cum += pub
+        self._pub_cum += pub + nulls
+        self.rounds += 1
+        return dataclasses.replace(self.view(), app_pub=pub, nulls=nulls)
+
+    def view(self) -> StreamView:
+        return StreamView(
+            round=self.rounds,
+            delivered_num=np.asarray(self._states.delivered_num),
+            published=np.asarray(self._states.published),
+            backlog=np.asarray(self._backlogs),
+            n_members=self._n, n_senders=self._s)
+
+    def app_publish_index(self, gid: int, rank: int,
+                          k: int) -> Optional[int]:
+        """Publish index (0-based, counting apps AND nulls) of sender
+        ``rank``'s ``k``-th app publish (1-based) in subgroup ``gid``,
+        from the accumulated round traces — or None if fewer than ``k``
+        apps have been published yet.  The serve fan-out pins its
+        slot-release watermarks on this (apps precede nulls within a
+        round, matching the sweep's ``published + app_pub + nulls``).
+
+        The common "still window-throttled" answer is O(1) (running
+        totals); the trace scan runs only once a hold's k-th app has
+        actually published — once per query target, not per round."""
+        if k <= 0 or self._app_cum[gid, rank] < k:
+            return None
+        apps = np.asarray([r[gid, rank] for r in self._app_pub], np.int64)
+        nulls = np.asarray([r[gid, rank] for r in self._nulls], np.int64)
+        app_cum = np.cumsum(apps)
+        r = int(np.searchsorted(app_cum, k))
+        pub_before = int(np.cumsum(apps + nulls)[r] - apps[r] - nulls[r])
+        return pub_before + int(k - (app_cum[r] - apps[r])) - 1
+
+    def quiescent(self, view: Optional[StreamView] = None) -> bool:
+        """No backlog anywhere and every deliverable seq delivered by
+        every real member (the round-robin prefix of the published
+        counts — with null-send on this is everything published)."""
+        v = self.view() if view is None else view
+        for g, (n_g, s_g) in enumerate(zip(self._n, self._s)):
+            if v.backlog[g, :s_g].any():
+                return False
+            deliverable = int(sst.rr_prefix(
+                v.published[g, :s_g].astype(np.int64))) - 1
+            if (v.delivered_num[g, :n_g] < deliverable).any():
+                return False
+        return True
+
+    def finish(self, settle_max: Optional[int] = None
+               ) -> Tuple[RunReport, Dict[int, DeliveryLog]]:
+        """Drain with zero-ready rounds until quiescent, then reconstruct
+        delivery logs and the unified report from the accumulated traces.
+        Also installs the logs on the owning Group and fires its delivery
+        upcalls, mirroring :meth:`Group.run`.
+
+        The drain is not a fixed budget: a window-throttled backlog of B
+        messages needs ~3·B/window rounds, so the loop instead runs until
+        quiescence or a protocol FIXED POINT (a zero-ready round that
+        changes nothing can never be followed by one that does — every
+        predicate is monotone in the state).  The fixed-point exit covers
+        scenarios that can never quiesce, e.g. ``null_send=False`` with
+        uneven sender counts.  ``settle_max`` optionally caps the drain
+        (the capped-off remainder reports as ``stalled``)."""
+        zeros = np.zeros(self.shape, np.int32)
+        settled = 0
+        while not self.quiescent():
+            if settle_max is not None and settled >= settle_max:
+                break
+            prev_states, prev_backlogs = self._states, self._backlogs
+            self.step(zeros)
+            settled += 1
+            if settle_max is None and _trees_equal(
+                    (prev_states, prev_backlogs),
+                    (self._states, self._backlogs)):
+                break                        # fixed point: done evolving
+        cfg = self.group.cfg
+        agg = _GraphAgg()
+        if self.rounds:
+            batches = np.stack(self._batches, axis=1)       # (G, T, N)
+            app_pub = np.stack(self._app_pub, axis=1)       # (G, T, S)
+            nulls = np.stack(self._nulls, axis=1)
+            round_t, round_w = jax.vmap(_fold_cost)(
+                jnp.asarray(app_pub), jnp.asarray(self._costs))
+            outs = [batches, app_pub, nulls,
+                    np.asarray(round_t), np.asarray(round_w)]
+            counts = {g: self._enqueued[g] for g in range(len(self._s))}
+            self.backend._finalize(cfg, counts, outs,
+                                   (self.rounds,) * len(self._n), agg)
+            if np.asarray(self._backlogs).any():
+                agg.stalled = True                # gave up with work queued
+        report = self.backend._report(agg, self._wall0)
+        report.extras["streamed_rounds"] = self.rounds
+        self.group.delivery_logs = agg.logs
+        self.group.last_report = report
+        self.group._fire_upcalls()
+        return report, agg.logs
 
 
 def _sum_delivered(logs: Mapping[int, DeliveryLog]) -> Tuple[int, int]:

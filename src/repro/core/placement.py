@@ -7,13 +7,20 @@ program on a single device — the ROADMAP's sharding/multi-device step,
 wired through the same `shard_map` machinery the training plane already
 uses (:mod:`repro.core.gradsync`, :mod:`repro.launch.mesh`).
 
-Policy (see :func:`shard_count`): shard over the largest device count that
-evenly divides the batch; when that is 1 (single device, or an indivisible
-batch) callers fall back to plain vmap — graceful degradation on a CPU-only
-host.  The mesh reuses :func:`repro.launch.mesh.make_smoke_mesh`'s
-"whatever devices exist" construction (and its ``data`` axis name) when
-every device participates, trimming to a prefix of ``jax.devices()``
-otherwise.
+Policy (see :func:`shard_count`, DESIGN.md Sec. 3): shard over the
+LARGEST device count that evenly divides the batch — deterministic per
+process, so it is safe inside compile-cache keys; when that is 1 (single
+device, or an indivisible batch) callers fall back to plain vmap —
+graceful degradation on a CPU-only host.  The mesh reuses
+:func:`repro.launch.mesh.make_smoke_mesh`'s "whatever devices exist"
+construction (and its ``data`` axis name) when every device participates,
+trimming to a prefix of ``jax.devices()`` otherwise.
+
+The shard_map wrapper passes ``check_rep=False``: shard_map's replication
+analysis has no rule for ``pallas_call``, so the pallas backend's sharded
+grid would crash with the check on — and nothing here relies on
+replication tracking (every output is sharded exactly like the inputs;
+there is no cross-shard communication to analyze).
 """
 
 from __future__ import annotations

@@ -8,8 +8,13 @@ standing in for wire latency.
 
 This module is the composable, in-graph form of the protocol: the DES in
 :mod:`repro.core.simulator` answers "how fast", this answers "is the logic
-a fixed point of the monotonic predicates" — and it is what the hypothesis
+a fixed point of the monotonic predicates" — and it is what the seeded
 property tests drive (no-stall, <=1-round skew, quiescence, total order).
+
+The receive predicate's consumption step is pluggable via ``receive_fn``
+with the 3-arg contract ``(pub_vis, recv_counts, valid) -> new
+recv_counts`` (``valid`` = the (N, S) padded-lane validity mask, or None
+when unpadded); see :func:`sweep` and DESIGN.md Sec. 3.
 """
 
 from __future__ import annotations
@@ -202,17 +207,41 @@ def run_rounds(state: SweepState, app_schedule: Array, *,
     return jax.lax.scan(body, state, app_schedule)
 
 
+def step_backlog(state: SweepState, backlog: Array, ready: Array, *,
+                 window=1 << 30, null_send=True, receive_fn=None,
+                 member_mask=None, sender_mask=None):
+    """One protocol round with the DES app-queue semantics: messages the
+    ring window throttles are requeued into ``backlog``, not dropped.
+
+    This is the body :func:`scan_rounds` scans AND the per-round step the
+    streaming entry points drive (:class:`repro.core.group.GroupStream`),
+    so a streamed sequence of rounds is bit-identical to the scanned
+    schedule by construction — same function, same arithmetic.
+
+    Returns ``((new_state, new_backlog), (delivered_batch (N,),
+    app_published (S,), nulls_published (S,)))``.
+    """
+    want = backlog + ready
+    new, batch = sweep(state, want, window=window, null_send=null_send,
+                       receive_fn=receive_fn, member_mask=member_mask,
+                       sender_mask=sender_mask)
+    pub = new.app_sent - state.app_sent
+    return (new, want - pub), (batch, pub, new.nulls_sent - state.nulls_sent)
+
+
 def scan_rounds(state: SweepState, app_schedule: Array, *,
                 window=1 << 30, null_send=True, receive_fn=None,
                 member_mask=None, sender_mask=None
                 ) -> Tuple[SweepState, Tuple[Array, Array, Array]]:
-    """lax.scan with a send-queue backlog and full per-round traces.
+    """lax.scan over :func:`step_backlog` with full per-round traces.
 
     Window-throttled messages are requeued, not dropped — the DES app-queue
     semantics the Group backends need.  app_schedule: (T, S) app messages
     becoming ready per round.  ``window``/``null_send`` may be traced
     scalars, and ``member_mask``/``sender_mask`` padded-validity masks
-    (see :func:`sweep`).
+    (see :func:`sweep`).  ``receive_fn``, when given, must follow the
+    3-arg contract ``(pub_vis, recv_counts, valid) -> new recv_counts``
+    documented on :func:`sweep`.
 
     Returns (final_state, (delivered_batches (T, N), app_published (T, S),
     nulls_published (T, S))) — everything delivery-log reconstruction and
@@ -222,13 +251,10 @@ def scan_rounds(state: SweepState, app_schedule: Array, *,
 
     def body(carry, ready):
         st, backlog = carry
-        want = backlog + ready
-        new, batch = sweep(st, want, window=window, null_send=null_send,
-                           receive_fn=receive_fn, member_mask=member_mask,
-                           sender_mask=sender_mask)
-        pub = new.app_sent - st.app_sent
-        return (new, want - pub), (batch, pub,
-                                   new.nulls_sent - st.nulls_sent)
+        return step_backlog(st, backlog, ready, window=window,
+                            null_send=null_send, receive_fn=receive_fn,
+                            member_mask=member_mask,
+                            sender_mask=sender_mask)
 
     carry = (state, jnp.zeros((n_senders,), jnp.int32))
     (state, _), traces = jax.lax.scan(body, carry, app_schedule)
@@ -290,6 +316,45 @@ def run_stacked(states: SweepState, app_schedules: Array, *, windows: Array,
                            sender_mask=sm)
 
     return jax.vmap(one)(states, app_schedules, jnp.asarray(windows),
+                         jnp.asarray(member_masks),
+                         jnp.asarray(sender_masks))
+
+
+def stream_stacked(states: SweepState, backlogs: Array, ready: Array, *,
+                   windows: Array, null_send, member_masks=None,
+                   sender_masks=None, receive_fn=None):
+    """ONE round of all G subgroups — the streaming form of
+    :func:`run_stacked` (same per-subgroup :func:`step_backlog`, so T
+    streamed rounds are bit-identical to one T-round stacked scan fed the
+    same per-round ``ready`` rows).
+
+    states: SweepState with leading (G,) leaves; backlogs: (G, S_max)
+    int32 window-throttled carry-over; ready: (G, S_max) int32 app
+    messages becoming ready this round (padded lanes must be 0).
+    Returns ``((states, backlogs), (batch (G, N_max), app_pub (G, S_max),
+    nulls (G, S_max)))``.
+    """
+    g = states.recv_counts.shape[0]
+    n_max = states.recv_counts.shape[1]
+    s_max = states.published.shape[1]
+    if member_masks is None and sender_masks is None:
+        def one_unmasked(st, bk, rd, w):
+            return step_backlog(st, bk, rd, window=w, null_send=null_send,
+                                receive_fn=receive_fn)
+
+        return jax.vmap(one_unmasked)(states, backlogs, ready,
+                                      jnp.asarray(windows))
+    if member_masks is None:
+        member_masks = jnp.ones((g, n_max), bool)
+    if sender_masks is None:
+        sender_masks = jnp.ones((g, s_max), bool)
+
+    def one(st, bk, rd, w, mm, sm):
+        return step_backlog(st, bk, rd, window=w, null_send=null_send,
+                            receive_fn=receive_fn, member_mask=mm,
+                            sender_mask=sm)
+
+    return jax.vmap(one)(states, backlogs, ready, jnp.asarray(windows),
                          jnp.asarray(member_masks),
                          jnp.asarray(sender_masks))
 

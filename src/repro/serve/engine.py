@@ -1,13 +1,16 @@
 """Batched serving engine with continuous batching and round-robin
 delivery (the paper's protocol shape, applied to inference).
 
-Mapping (DESIGN.md): requests are messages; the decode loop is the
+Mapping (DESIGN.md Sec. 6): requests are messages; the decode loop is the
 predicate sweep — every iteration it *opportunistically batches* whatever
 is ready (admits new requests into free KV-cache slots = SMC ring slots,
 decodes every active slot in one fused step); a slot is freed only after
 its response is delivered (slot-reuse rule).  A request that stalls
 (client backpressure) occupies its slot but decodes a null step — the
-batch round never waits (null-round analogue).
+batch round never waits (null-round analogue).  The multicast side of the
+mapping — each round's admissions and emitted tokens published on a DDS
+topic per replica, swept by ONE stacked program — lives in
+:mod:`repro.serve.fanout`.
 
 Single-host reference implementation; the decode step itself is the same
 ``make_serve_step`` the multi-pod dry-run lowers, so the engine scales to
@@ -18,7 +21,7 @@ caches — dense/moe/vlm/encdec families), where an idle slot's garbage
 write is harmlessly overwritten at its own position.  Recurrent families
 (ssm/hybrid) mutate state on every step and would need a validity-masked
 state update (the null-round mask of repro.core.gradsync, applied to
-decode) — documented future work.
+decode) — explicitly deferred in DESIGN.md Sec. 9 (future work).
 """
 
 from __future__ import annotations
@@ -26,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +56,22 @@ class EngineConfig:
     max_len: int = 256
     eos_id: Optional[int] = None
     greedy: bool = True
+
+
+@dataclasses.dataclass
+class EngineRound:
+    """What one :meth:`ServeEngine.step` did — the per-round event record
+    the serve fan-out publishes as multicast messages (one message per
+    admission, one per emitted token; see :mod:`repro.serve.fanout`)."""
+
+    admitted: List[int] = dataclasses.field(default_factory=list)  # slots
+    admitted_rids: List[int] = dataclasses.field(default_factory=list)
+    emitted: List[int] = dataclasses.field(default_factory=list)   # slots
+    finished: List[int] = dataclasses.field(default_factory=list)  # slots
+    stalled: List[int] = dataclasses.field(default_factory=list)   # slots
+
+    def __bool__(self) -> bool:          # truthy = the round made progress
+        return bool(self.admitted or self.emitted)
 
 
 class ServeEngine:
@@ -89,13 +108,22 @@ class ServeEngine:
         req.submitted_at = req.submitted_at or time.time()
         self.queue.append(req)
 
-    def _admit(self):
+    def _admit(self, admit_mask: Optional[Sequence[bool]] = None
+               ) -> List[int]:
         """Opportunistic admission: fill every free slot that has a ready
-        request (never waits to accumulate a batch)."""
+        request (never waits to accumulate a batch).  ``admit_mask``
+        restricts which slots may admit this round — the serve fan-out
+        gates it on the multicast delivery watermark (slot free = last
+        response delivered, the SMC slot-reuse rule).  Returns the slots
+        admitted into."""
+        admitted = []
         for slot in range(self.ecfg.max_batch):
-            if self.slot_req[slot] is None and self.queue:
+            if (self.slot_req[slot] is None and self.queue
+                    and (admit_mask is None or admit_mask[slot])):
                 req = self.queue.popleft()
                 self._prefill_slot(slot, req)
+                admitted.append(slot)
+        return admitted
 
     def _prefill_slot(self, slot: int, req: Request):
         """Sequential prefill through the decode path (single-host
@@ -115,13 +143,26 @@ class ServeEngine:
 
     # -- the decode sweep ------------------------------------------------------
 
-    def step(self):
-        """One engine round: admit ready work, decode every active slot."""
+    def step(self, *, stalled: Optional[Sequence[int]] = None,
+             admit_mask: Optional[Sequence[bool]] = None) -> EngineRound:
+        """One engine round: admit ready work, decode every active slot.
+
+        ``stalled`` names slots whose client cannot accept output this
+        round (backpressure): they keep their slot but make no progress —
+        the null-step analogue; the fused decode never waits for them.
+        ``admit_mask`` restricts admission (see :meth:`_admit`).  Returns
+        the round's :class:`EngineRound` event record (truthy when any
+        slot admitted or decoded — the old boolean contract)."""
         self.rounds += 1
-        self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        stalled_set = set(stalled or ())
+        info = EngineRound(admitted=self._admit(admit_mask))
+        info.admitted_rids = [self.slot_req[s].rid for s in info.admitted]
+        info.stalled = sorted(stalled_set & {
+            i for i, r in enumerate(self.slot_req) if r is not None})
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and i not in stalled_set]
         if not active:
-            return False
+            return info
         b = self.ecfg.max_batch
         tokens = np.zeros((b, 1), dtype=np.int32)
         for i in active:
@@ -130,6 +171,8 @@ class ServeEngine:
                 int(req.prompt[-1])
             tokens[i, 0] = last
         # one fused decode for the whole ring with per-slot positions
+        # (a stalled slot's garbage write at its own position is
+        # overwritten by its real decode once the stall clears)
         pos = jnp.asarray(self.slot_len, jnp.int32)
         logits, self.cache = self.decode(self.params, self.cache,
                                          jnp.asarray(tokens), pos)
@@ -139,6 +182,7 @@ class ServeEngine:
             req = self.slot_req[i]
             nxt = int(np.argmax(logits[i]))
             req.tokens_out.append(nxt)
+            info.emitted.append(i)
             self.slot_len[i] += 1
             done = (len(req.tokens_out) >= req.max_new_tokens
                     or (self.ecfg.eos_id is not None
@@ -149,10 +193,24 @@ class ServeEngine:
                 self.completed.append(req)
                 self.slot_req[i] = None    # slot delivered -> reusable
                 self.slot_len[i] = 0
-        return True
+                info.finished.append(i)
+        return info
+
+    def drained(self) -> bool:
+        return not self.queue and all(r is None for r in self.slot_req)
 
     def run_until_drained(self, max_rounds: int = 10_000):
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and self.rounds < max_rounds:
+        while not self.drained() and self.rounds < max_rounds:
             self.step()
         return self.completed
+
+    def reset(self) -> None:
+        """Clear all request/slot state, keeping params and the compiled
+        decode program (re-running a scenario skips the jit cost; stale
+        KV entries are position-overwritten before any read)."""
+        self.slot_req = [None] * self.ecfg.max_batch
+        self.slot_len[:] = 0
+        self.queue.clear()
+        self.completed = []
+        self.rounds = 0
+        self.decode_steps = 0

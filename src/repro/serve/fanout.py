@@ -1,0 +1,234 @@
+"""Serve-plane multicast: request fan-out on the stacked group substrate
+(DESIGN.md Sec. 6).
+
+The paper's end-to-end payoff is the OMG-DDS built over Derecho inheriting
+the batching and null-send optimizations; the analogue here is the serving
+plane riding the multicast substrate.  :class:`ReplicatedEngine` runs G
+replica :class:`~repro.serve.engine.ServeEngine`\\ s and publishes every
+decode round's events — admitted requests and emitted tokens — as
+messages on one DDS topic per replica, streamed through the SAME stacked
+compiled program that runs benchmark scenarios
+(:meth:`repro.core.dds.Domain.bind` ->
+:class:`repro.core.group.GroupStream`): engine slots x replica subgroups,
+one dispatch per engine round, one trace for the whole serve session.
+
+The slot ring IS the SMC ring, explicitly:
+
+* **senders = slots.**  Each topic's publishers are the replica's KV
+  slots (one multicast sender rank per slot), so the admission order is
+  the protocol's round-robin (``rr_prefix_masked``) total order.
+* **stalled clients = null-send rounds.**  A slot whose client applies
+  backpressure decodes a null step and publishes nothing; the null-send
+  scheme covers its rank so every other slot's tokens keep delivering.
+* **slot free = delivery watermark.**  A completed request's slot may
+  admit new work only once the multicast watermark shows its last token
+  message delivered at every subscriber — the SMC slot-reuse rule applied
+  to KV-cache slots.
+
+:meth:`ReplicatedEngine.run` returns the multicast
+:class:`~repro.core.group.RunReport` merged with serving metrics
+(``extras["serve"]``: tokens/s, decode steps, stall rounds) so one record
+carries tokens/s alongside multicast duration/rdma_writes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import dds
+from repro.core.group import RunReport
+from repro.serve.engine import ServeEngine
+
+# stall_fn(replica, engine_round) -> slots whose client is backpressured
+StallFn = Callable[[int, int], Sequence[int]]
+
+
+@dataclasses.dataclass
+class _SlotHold:
+    """A completed request whose slot awaits the delivery watermark."""
+
+    target_apps: int                 # enqueued app messages at finish time
+    last_idx: Optional[int] = None   # publish index of the last app msg
+    finished_round: int = 0
+
+
+class ReplicatedEngine:
+    """G replica serve engines whose decode rounds ride one stacked
+    multicast program.
+
+    ``engines`` are the replicas (any mix of shapes; replica ``g``'s
+    topic gets one sender rank per KV slot).  Each replica's topic is
+    subscribed by ``subscribers_per_replica`` follower nodes (standbys /
+    response loggers — the processes that must observe the replica's
+    admission+token stream in total order).  ``stall_fn(g, round)`` names
+    the slots of replica ``g`` whose client is backpressured that engine
+    round.  ``window`` is the per-slot SMC ring window: how many
+    undelivered messages a slot may have in flight before the send
+    predicate throttles it.
+    """
+
+    def __init__(self, engines: Sequence[ServeEngine], *,
+                 subscribers_per_replica: int = 1, window: int = 8,
+                 sample_size: int = 2048,
+                 qos: dds.QoS = dds.QoS.ATOMIC_MULTICAST,
+                 backend: str = "graph",
+                 stall_fn: Optional[StallFn] = None):
+        if not engines:
+            raise ValueError("need at least one replica engine")
+        self.engines = list(engines)
+        self.backend = backend
+        self.stall_fn = stall_fn
+        self._slots = [eng.ecfg.max_batch for eng in self.engines]
+        # Slot nodes are numbered BELOW the replica's subscriber nodes so
+        # each topic's publishers are its first members in slot order —
+        # sender rank s == slot s (the sweep's rank convention).
+        node = 0
+        self.domain = dds.Domain(n_nodes=0)
+        self.topics: List[dds.Topic] = []
+        for g, b in enumerate(self._slots):
+            slot_nodes = list(range(node, node + b))
+            subs = list(range(node + b,
+                              node + b + subscribers_per_replica))
+            node += b + subscribers_per_replica
+            self.domain.n_nodes = node
+            self.topics.append(self.domain.create_topic(
+                f"replica-{g}", publishers=slot_nodes, subscribers=subs,
+                sample_size=sample_size, qos=qos, window=window))
+        # per-run traces (tests read these)
+        self.admit_rounds: Dict[int, int] = {}       # rid -> engine round
+        self.admit_slots: Dict[int, Tuple[int, int]] = {}  # rid -> (g, s)
+        self.finish_rounds: List[Tuple[int, int, int]] = []  # (g, s, rnd)
+        self.free_rounds: List[Tuple[int, int, int]] = []    # (g, s, rnd)
+        self.stall_rounds = 0
+        self.last_report: Optional[RunReport] = None
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def _reset_run_state(self):
+        g_n = len(self.engines)
+        self._apps_enqueued = [np.zeros(b, np.int64) for b in self._slots]
+        self._holds: List[Dict[int, _SlotHold]] = [{} for _ in
+                                                   range(g_n)]
+        self.admit_rounds = {}
+        self.admit_slots = {}
+        self.finish_rounds = []
+        self.free_rounds = []
+        self.stall_rounds = 0
+
+    def _sync_holds(self, stream, view, round_no: int):
+        """Pin each pending hold to its last app message's publish index
+        (:meth:`GroupStream.app_publish_index` — None while that message
+        is still window-throttled) and release holds the delivery
+        watermark has passed."""
+        for g in range(len(self.engines)):
+            watermark = view.sender_delivered(g)
+            for slot in list(self._holds[g]):
+                hold = self._holds[g][slot]
+                if hold.last_idx is None:
+                    hold.last_idx = stream.app_publish_index(
+                        g, slot, hold.target_apps)
+                if hold.last_idx is not None and \
+                        watermark[slot] > hold.last_idx:
+                    del self._holds[g][slot]
+                    self.free_rounds.append((g, slot, round_no))
+
+    # -- the fused serve+multicast loop --------------------------------------
+
+    def submit(self, replica: int, req) -> None:
+        self.engines[replica].submit(req)
+
+    def run(self, *, max_rounds: int = 10_000,
+            settle_max: Optional[int] = None) -> RunReport:
+        """Drive every replica to drain, one multicast round per engine
+        round, then settle the multicast and return the merged report.
+
+        Every engine round is ONE stacked-program dispatch across all G
+        replica topics (the program is traced once per scenario shape —
+        a whole run appends a single ``TRACE_EVENTS`` entry).  Admission
+        into a freed slot is gated on the delivery watermark; requests
+        queue behind held slots rather than overwrite undelivered ring
+        state."""
+        self._reset_run_state()
+        bound = self.domain.bind(backend=self.backend)
+        wall0 = time.perf_counter()
+        # serve metrics are per-RUN deltas: engines accumulate completed
+        # requests across runs (reset() clears them), and a second run
+        # must not re-count — or re-rate — the first run's tokens
+        tok0 = sum(len(r.tokens_out) for eng in self.engines
+                   for r in eng.completed)
+        req0 = sum(len(eng.completed) for eng in self.engines)
+        steps0 = sum(eng.decode_steps for eng in self.engines)
+        round_no = 0
+        while (round_no < max_rounds
+               and not all(eng.drained() for eng in self.engines)):
+            counts_by_topic = {}
+            for g, eng in enumerate(self.engines):
+                stalled = tuple(self.stall_fn(g, round_no)) \
+                    if self.stall_fn else ()
+                held = self._holds[g]
+                mask = [s not in held for s in range(self._slots[g])]
+                info = eng.step(stalled=stalled, admit_mask=mask)
+                self.stall_rounds += len(info.stalled)
+                c = np.zeros(self._slots[g], np.int64)
+                for slot, rid in zip(info.admitted, info.admitted_rids):
+                    c[slot] += 1               # the admitted-request batch
+                    self.admit_rounds[rid] = round_no
+                    self.admit_slots[rid] = (g, slot)
+                for slot in info.emitted:
+                    c[slot] += 1               # the emitted token
+                self._apps_enqueued[g] += c
+                for slot in info.finished:
+                    self._holds[g][slot] = _SlotHold(
+                        target_apps=int(self._apps_enqueued[g][slot]),
+                        finished_round=round_no)
+                    self.finish_rounds.append((g, slot, round_no))
+                counts_by_topic[self.topics[g].name] = c
+            view = bound.push_round(counts_by_topic)
+            self._sync_holds(bound.stream, view, round_no)
+            round_no += 1
+        report, logs = bound.finish(settle_max=settle_max)
+        # release holds the settle rounds delivered — including holds
+        # whose last app message was still window-throttled when the
+        # engines drained (unpinned): by quiescence it has published
+        self._sync_holds(bound.stream, bound.stream.view(), round_no)
+        wall = time.perf_counter() - wall0
+        tokens = sum(len(r.tokens_out) for eng in self.engines
+                     for r in eng.completed) - tok0
+        report.extras["delivery_logs"] = logs
+        report.extras["serve"] = {
+            "replicas": len(self.engines),
+            "engine_rounds": round_no,
+            # False = max_rounds exhausted with work still queued/in
+            # flight; the report then covers only what was served
+            "drained": all(eng.drained() for eng in self.engines),
+            "decode_steps": sum(e.decode_steps
+                                for e in self.engines) - steps0,
+            "requests": sum(len(e.completed)
+                            for e in self.engines) - req0,
+            "tokens": tokens,
+            "tokens_per_s": tokens / wall if wall > 0 else 0.0,
+            "stall_rounds": self.stall_rounds,
+            "held_slots": sum(len(h) for h in self._holds),
+            "wall_s": wall,
+        }
+        self.last_report = report
+        return report
+
+    # -- results -------------------------------------------------------------
+
+    def completed(self) -> Dict[int, List[List[int]]]:
+        """Per replica: token streams of completed requests in rid order
+        (accumulated since the last :meth:`reset`, like the engines'
+        own ``completed`` lists — report metrics are per-run deltas)."""
+        return {g: [r.tokens_out for r in
+                    sorted(eng.completed, key=lambda r: r.rid)]
+                for g, eng in enumerate(self.engines)}
+
+    def reset(self) -> None:
+        """Reset every replica engine (keeps params + compiled decode)."""
+        for eng in self.engines:
+            eng.reset()

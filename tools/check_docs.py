@@ -1,0 +1,93 @@
+"""Docs-consistency gate (CI step `docs-check`).
+
+Two checks, both hard failures:
+
+1. **DESIGN.md section references resolve.**  Docstrings across `src/`
+   cite `DESIGN.md Sec. N`; every cited N must exist as a `## Sec. N`
+   heading in DESIGN.md (and DESIGN.md itself must exist).  This is what
+   keeps the doc from rotting back into a dangling citation — the state
+   this repo was in before PR 4.
+
+2. **README runnable snippets run.**  Fenced code blocks in README.md
+   tagged ```` ```python run ```` are executed (in order, one shared
+   namespace per block) so the quickstart can't drift from the API.
+
+Run:  PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DESIGN = ROOT / "DESIGN.md"
+README = ROOT / "README.md"
+SRC = ROOT / "src"
+
+SECTION_RE = re.compile(r"^##\s+Sec\.\s*(\d+)", re.MULTILINE)
+# whitespace-tolerant: docstring line wraps may split "DESIGN.md Sec. N"
+CITE_RE = re.compile(r"DESIGN\.md\s+Sec\.\s*(\d+)")
+SNIPPET_RE = re.compile(r"^```python\s+run\s*$(.*?)^```\s*$",
+                        re.MULTILINE | re.DOTALL)
+
+
+def check_design_sections() -> list:
+    errors = []
+    if not DESIGN.exists():
+        return [f"{DESIGN.name} does not exist (cited all over src/)"]
+    sections = {int(m) for m in SECTION_RE.findall(DESIGN.read_text())}
+    if not sections:
+        return [f"{DESIGN.name} has no '## Sec. N' headings"]
+    cited = 0
+    for path in sorted(SRC.rglob("*.py")):
+        text = path.read_text()
+        for m in CITE_RE.finditer(text):
+            cited += 1
+            sec = int(m.group(1))
+            if sec not in sections:
+                line = text[: m.start()].count("\n") + 1
+                errors.append(
+                    f"{path.relative_to(ROOT)}:{line}: cites DESIGN.md "
+                    f"Sec. {sec}, which does not exist (have "
+                    f"{sorted(sections)})")
+    print(f"design-refs: {cited} citation(s) across src/ against "
+          f"sections {sorted(sections)}")
+    if not cited:
+        errors.append("no DESIGN.md citations found under src/ — the "
+                      "scan pattern or the tree moved")
+    return errors
+
+
+def check_readme_snippets() -> list:
+    errors = []
+    if not README.exists():
+        return ["README.md does not exist"]
+    snippets = SNIPPET_RE.findall(README.read_text())
+    if not snippets:
+        return ["README.md has no '```python run' snippet — the "
+                "quickstart must stay executable"]
+    for i, code in enumerate(snippets):
+        t0 = time.perf_counter()
+        try:
+            exec(compile(code, f"README.md[snippet {i}]", "exec"), {})
+            print(f"readme-snippet {i}: OK "
+                  f"({time.perf_counter() - t0:.1f}s)")
+        except Exception as e:                      # noqa: BLE001
+            errors.append(f"README.md snippet {i} failed: {e!r}")
+    return errors
+
+
+def main() -> int:
+    errors = check_design_sections() + check_readme_snippets()
+    for e in errors:
+        print(f"docs-check FAIL: {e}", file=sys.stderr)
+    if not errors:
+        print("docs-check passed")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
