@@ -24,6 +24,12 @@ are simulated-time):
   runs) is the steady-state serve+multicast cost, with ``tok_per_s_warm``
   the wall-clock token rate and ``one_program`` asserting the whole run
   appended a single TRACE_EVENTS entry.
+* ``view_change``   — warm reconfigure-under-traffic: the
+  virtual-synchrony cut of a live stream (wedge + ragged trim + epoch
+  carry + new-stream hand-off, DESIGN.md Sec. 7) with the padded stack
+  shape preserved; ``reused_program`` asserts the new epoch dispatches
+  the SAME cached program (no fresh-epoch restart), ``resend_msgs`` that
+  traffic was genuinely in flight at the cut.
 
 Writes ``BENCH_hotpath.json`` at the repo root (committed — the perf
 baseline later PRs regress against).  ``--smoke`` runs tiny shapes and
@@ -63,10 +69,12 @@ FULL = dict(n=8, senders=4, msgs=150, window=32)
 FULL_GRID = (4, 8, 16, 24, 32, 48, 64, 100)
 FULL_TOPICS = dict(n_nodes=8, n_topics=16, samples=40)
 FULL_SERVE = dict(replicas=2, slots=3, reqs=5, prompt=4, new_tokens=6)
+FULL_VC = dict(n=8, senders=4, window=8, rounds=6, per_round=2)
 SMOKE = dict(n=4, senders=2, msgs=24, window=8)
 SMOKE_GRID = (4, 6, 8, 12)
 SMOKE_TOPICS = dict(n_nodes=4, n_topics=16, samples=6)
 SMOKE_SERVE = dict(replicas=2, slots=2, reqs=3, prompt=3, new_tokens=4)
+SMOKE_VC = dict(n=4, senders=2, window=4, rounds=4, per_round=2)
 
 # --smoke regression gate: fail when current > 3x baseline + slack.  The
 # slack absorbs CI-runner jitter on the millisecond-scale warm metrics but
@@ -266,18 +274,70 @@ def bench_serve_fanout(shape, backend="graph"):
     }
 
 
-def run_suite(shape, grid, topics, serve):
+def bench_view_change(shape, backend="graph"):
+    """Warm reconfigure-under-traffic: the virtual-synchrony cut of a
+    LIVE stream (wedge at the SST watermarks, ragged trim, epoch carry,
+    new-stream hand-off) with the padded stack shape preserved, so the
+    cached one-round program is reused in the new epoch.  The measured
+    wall clock is the cut itself — ``reused_program`` asserts the warm
+    cycles never re-trace (a fresh-epoch-restart regression would show
+    up both here and as a >3x reconfigure_s blowup)."""
+    from repro import api
+    from repro.core.group import TRACE_EVENTS
+
+    n, s = shape["n"], shape["senders"]
+    spec = api.SubgroupSpec(members=tuple(range(n)),
+                            senders=tuple(range(s)), msg_size=4096,
+                            window=shape["window"], n_messages=0)
+    # one spare node outside the subgroup: its failure rolls the epoch
+    # (full wedge + cut + resend) without re-shaping the stack
+    cfg = api.GroupConfig(members=tuple(range(n + 1)), subgroups=(spec,))
+    view = api.View(vid=1, members=tuple(range(n)),
+                    senders=tuple(range(n)))
+
+    def cycle():
+        stream = api.Group(cfg).stream(backend=backend)
+        ready = np.zeros(stream.shape, np.int32)
+        ready[0, :s] = shape["per_round"]
+        for _ in range(shape["rounds"]):
+            stream.step(ready)
+        t0 = time.perf_counter()
+        s2 = stream.reconfigure(view)
+        dt = time.perf_counter() - t0
+        for _ in range(shape["rounds"]):
+            s2.step(ready)
+        report, _ = s2.finish()
+        return dt, s2.carry, report
+
+    cycle()                             # warm: trace the stream program
+    n0 = len(TRACE_EVENTS)
+    best, carry, report = float("inf"), None, None
+    for _ in range(3):
+        dt, c, r = cycle()
+        if dt < best:
+            best, carry, report = dt, c, r
+    return {
+        "reconfigure_s": round(best, 4),
+        "resend_msgs": int(carry.total_resend()),
+        "delivered_app_msgs": report.delivered_app_msgs,
+        "reused_program": bool(len(TRACE_EVENTS) == n0),
+    }
+
+
+def run_suite(shape, grid, topics, serve, vc):
     return {
         "repeated_run_graph": bench_repeated_run(shape, "graph"),
         "repeated_run_pallas": bench_repeated_run(shape, "pallas"),
         "window_grid_graph": bench_window_grid(shape, grid, "graph"),
         "many_topics_graph": bench_many_topics(topics, "graph"),
         "serve_fanout": bench_serve_fanout(serve, "graph"),
+        "view_change": bench_view_change(vc, "graph"),
     }
 
 
 def smoke_gate(baseline_path: Path) -> int:
-    results = run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS, SMOKE_SERVE)
+    results = run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS, SMOKE_SERVE,
+                        SMOKE_VC)
     if not baseline_path.exists():
         print(f"no baseline at {baseline_path}; smoke measured only")
         print(json.dumps(results, indent=1))
@@ -288,7 +348,8 @@ def smoke_gate(baseline_path: Path) -> int:
                           ("repeated_run_pallas", "warm_s"),
                           ("window_grid_graph", "batch_s"),
                           ("many_topics_graph", "stacked_warm_s"),
-                          ("serve_fanout", "warm_s")):
+                          ("serve_fanout", "warm_s"),
+                          ("view_change", "reconfigure_s")):
         cur = results[bench][metric]
         ref = base.get(bench, {}).get(metric)
         if ref is None:
@@ -306,6 +367,10 @@ def smoke_gate(baseline_path: Path) -> int:
     if not results["serve_fanout"]["one_program"]:
         print("serve_fanout: a run compiled more than one stacked program")
         failures.append("serve_fanout.one_program")
+    if not results["view_change"]["reused_program"]:
+        print("view_change: a shape-preserving cut re-traced the stream "
+              "program (fresh-epoch restart regression)")
+        failures.append("view_change.reused_program")
     if failures:
         print(f"bench-smoke FAILED: {failures}")
         return 1
@@ -323,14 +388,18 @@ def main() -> int:
         return smoke_gate(args.json)
     record = {
         "pre_pr_baseline": PRE_PR,
-        "full": run_suite(FULL, FULL_GRID, FULL_TOPICS, FULL_SERVE),
-        "smoke": run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS, SMOKE_SERVE),
+        "full": run_suite(FULL, FULL_GRID, FULL_TOPICS, FULL_SERVE,
+                          FULL_VC),
+        "smoke": run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS, SMOKE_SERVE,
+                           SMOKE_VC),
         "scenario": {"full": {**FULL, "grid": list(FULL_GRID),
                               "topics": dict(FULL_TOPICS),
-                              "serve": dict(FULL_SERVE)},
+                              "serve": dict(FULL_SERVE),
+                              "view_change": dict(FULL_VC)},
                      "smoke": {**SMOKE, "grid": list(SMOKE_GRID),
                                "topics": dict(SMOKE_TOPICS),
-                               "serve": dict(SMOKE_SERVE)}},
+                               "serve": dict(SMOKE_SERVE),
+                               "view_change": dict(SMOKE_VC)}},
     }
     full = record["full"]
     full["vs_pre_pr"] = {
@@ -354,7 +423,9 @@ def main() -> int:
           and full["many_topics_graph"]["speedup_stacked"] > 1
           and full["many_topics_graph"]["logs_identical"]
           and full["serve_fanout"]["one_program"]
-          and full["serve_fanout"]["tok_per_s_warm"] > 0)
+          and full["serve_fanout"]["tok_per_s_warm"] > 0
+          and full["view_change"]["reused_program"]
+          and full["view_change"]["resend_msgs"] > 0)
     print("acceptance:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -30,11 +30,11 @@ from repro.core.costmodel import HOST_X86, RDMA_CX6, TPU_ICI
 from repro.core.dds import (BoundDomain, Domain, QoS, Topic,
                             many_topic_domain, single_topic_domain)
 from repro.core.group import (BACKENDS, Delivery, DeliveryLog, DESBackend,
-                              GraphBackend, Group, GroupConfig, GroupStream,
-                              PallasBackend, ProtocolBackend, RunReport,
-                              SenderPattern, SpindleFlags, StreamView,
-                              SubgroupHandle, SubgroupSpec, get_backend,
-                              register_backend, single_group)
+                              EpochCarry, GraphBackend, Group, GroupConfig,
+                              GroupStream, PallasBackend, ProtocolBackend,
+                              RunReport, SenderPattern, SpindleFlags,
+                              StreamView, SubgroupHandle, SubgroupSpec,
+                              get_backend, register_backend, single_group)
 from repro.core.views import MembershipService, View
 
 # The serve-plane fan-out (repro.serve.fanout.ReplicatedEngine) is NOT
@@ -44,7 +44,8 @@ from repro.core.views import MembershipService, View
 
 __all__ = [
     "BACKENDS", "BoundDomain", "DESBackend", "Delivery", "DeliveryLog",
-    "Domain", "GraphBackend", "Group", "GroupConfig", "GroupStream",
+    "Domain", "EpochCarry", "GraphBackend", "Group", "GroupConfig",
+    "GroupStream",
     "HOST_X86", "MembershipService", "PallasBackend", "ProtocolBackend",
     "QoS", "RDMA_CX6", "RunReport", "SenderPattern", "SpindleFlags",
     "StreamView", "SubgroupHandle", "SubgroupSpec", "TPU_ICI", "Topic",

@@ -88,6 +88,31 @@ def split_app_and_null(batch: DeliveryBatch, is_app) -> tuple:
     return n_app, total - n_app
 
 
+def apps_in_publish_prefix(app_pub, nulls, n_publishes) -> int:
+    """Application messages among one sender's first ``n_publishes``
+    publishes, given its per-round publish trace.
+
+    app_pub/nulls: (T,) per-round app/null publish counts for ONE sender
+    rank (the stacked traces, sliced).  Within a round a sender publishes
+    its apps before its nulls (matching :func:`repro.core.sweep.sweep`'s
+    ``published + app_pub + nulls``), so of round r's publishes the apps
+    occupy positions ``[cum_before_r, cum_before_r + app_pub[r])``.
+
+    This is the per-sender half of the virtual-synchrony cut (DESIGN.md
+    Sec. 7): with ``n_publishes`` = the sender's publish count at the
+    ragged trim (:func:`repro.core.sst.ragged_trim` +
+    :func:`repro.core.sst.sender_counts`), the result is how many of its
+    app messages are stable — delivered everywhere in the closing view —
+    and everything after that must be resent in the next one.
+    """
+    app_pub = np.asarray(app_pub, dtype=np.int64)
+    nulls = np.asarray(nulls, dtype=np.int64)
+    total = app_pub + nulls
+    before = np.cumsum(total) - total            # exclusive prefix
+    taken = np.clip(n_publishes - before, 0, app_pub)
+    return int(taken.sum())
+
+
 def deliver(batch: DeliveryBatch,
             upcall: Callable[[int, int, int], None],
             batched: bool = True,

@@ -307,6 +307,37 @@ def get_backend(backend) -> ProtocolBackend:
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class EpochCarry:
+    """What one membership epoch hands the next across the
+    virtual-synchrony cut (DESIGN.md Sec. 7).
+
+    Every field is indexed by the NEW view's subgroup ids and sender
+    ranks (the closing epoch's ranks remapped through the surviving
+    membership).  ``resend[g][s]`` is how many of sender s's app
+    messages were underway at the cut — enqueued in the closing epoch
+    but not stable at the ragged trim — and must be re-published in the
+    new view; per-sender FIFO order is preserved by construction because
+    the resend set is the *tail* of that sender's sequence.
+    ``stable_apps[g][s]`` is the closing epoch's delta of apps delivered
+    everywhere (what the serve plane rebases its slot holds by);
+    ``app_base[g][s]`` the cumulative count across ALL prior epochs —
+    the global FIFO position of the new epoch's k-th app from s is
+    ``app_base[g][s] + k``, and this is the monotone watermark the
+    view-change soaks assert never regresses.  ``cut_seq[g]`` is the
+    ragged-trim seq in the CLOSING subgroup's total order (diagnostics;
+    new-epoch seqs restart at 0)."""
+
+    from_epoch: int
+    cut_seq: Tuple[int, ...]
+    resend: Tuple[np.ndarray, ...]
+    stable_apps: Tuple[np.ndarray, ...]
+    app_base: Tuple[np.ndarray, ...]
+
+    def total_resend(self) -> int:
+        return int(sum(r.sum() for r in self.resend))
+
+
 class SubgroupHandle:
     """Send/upcall handle for one subgroup — the Derecho user surface."""
 
@@ -360,6 +391,13 @@ class Group:
         self._upcalls: Dict[int, List[Callable]] = {}
         self.delivery_logs: Dict[int, DeliveryLog] = {}
         self.last_report: Optional[RunReport] = None
+        # virtual-synchrony epoch carry (set by a cut, consumed by the
+        # next epoch's runs/streams — DESIGN.md Sec. 7)
+        self.carry: Optional[EpochCarry] = None
+        # old gid -> new gid / old->new sender rank maps, populated by
+        # reconfigure() on the group it RETURNS (None on fresh groups)
+        self._gid_map: Optional[Dict[int, int]] = None
+        self._sender_maps: Optional[Dict[int, List[Tuple[int, int]]]] = None
 
     # -- construction helpers ------------------------------------------------
 
@@ -385,7 +423,11 @@ class Group:
         ``SenderPattern.n_messages`` budgets (a sender you did not send()
         to sends nothing).  Without explicit sends, pattern budgets
         override the spec default per sender.  Inactive patterns always
-        mask to zero."""
+        mask to zero.  A virtual-synchrony ``carry`` (resend counts from
+        the previous epoch's cut) is added ON TOP of whatever the above
+        computes — resends are obligations of the new view, not scenario
+        traffic, so they ride every backend's schedule identically (the
+        des/graph/pallas conformance of post-cut runs is free)."""
         cfg = self.cfg if cfg is None else cfg
         spec = cfg.subgroups[gid]
         explicit = self._explicit.get(gid)
@@ -405,6 +447,15 @@ class Group:
                 counts[rank] = 0
             elif pat.n_messages is not None and explicit is None:
                 counts[rank] = pat.n_messages
+        if self.carry is not None:
+            resend = self.carry.resend[gid]
+            if len(resend) != len(spec.senders):
+                raise ValueError(
+                    f"subgroup {gid} carries resends for {len(resend)} "
+                    f"senders but the (overridden) spec has "
+                    f"{len(spec.senders)}; a sender-set override cannot "
+                    "silently drop the previous epoch's resend set")
+            counts = counts + resend.astype(counts.dtype)
         return counts
 
     # -- running -------------------------------------------------------------
@@ -521,17 +572,31 @@ class Group:
         """Install a new membership view: every subgroup is restricted to
         the surviving members (failed senders drop out; the null-send
         scheme covers them until the view installs).  Returns a fresh
-        ``Group`` for the new epoch; upcall registrations carry over,
-        queued sends and delivery logs do not (messages underway at a view
-        change are delivered in the old view or resent in the new one)."""
+        ``Group`` for the new epoch.
+
+        What crosses the epoch boundary (DESIGN.md Sec. 7): upcall
+        registrations, and QUEUED explicit sends — messages handed to
+        ``send()`` but never yet underway are the head of the
+        virtual-synchrony resend set, remapped to the surviving sender
+        ranks (a failed sender's queue dies with it).  Delivery logs do
+        NOT carry: each epoch's log is its own total order.  In-flight
+        state — messages *published* but not yet stable — is carried by
+        the streaming path (:meth:`GroupStream.reconfigure`), which
+        computes the cut and installs its resend decision as ``carry``
+        on the Group it hands back; scheduled runs of a carried Group
+        add those resends to every sender's counts on every backend
+        (:meth:`send_counts`)."""
         alive = set(view.members)
         new_specs = []
         gid_map: Dict[int, int] = {}     # old gid -> new gid
+        sender_maps: Dict[int, List[Tuple[int, int]]] = {}
         for gid, spec in enumerate(self.cfg.subgroups):
             members = tuple(m for m in spec.members if m in alive)
             senders = tuple(s for s in spec.senders if s in alive)
             if not members:
                 continue                 # every member failed: subgroup dies
+            sender_maps[gid] = [(spec.senders.index(s), new_rank)
+                                for new_rank, s in enumerate(senders)]
             if not senders:
                 senders = (members[0],)
             gid_map[gid] = len(new_specs)
@@ -548,6 +613,17 @@ class Group:
         g._upcalls = {gid_map[gid]: list(fns)
                       for gid, fns in self._upcalls.items()
                       if gid in gid_map}
+        for gid, new_gid in gid_map.items():
+            queued = self._explicit.get(gid)
+            if queued is None:
+                continue
+            remapped = np.zeros(len(new_specs[new_gid].senders), np.int64)
+            for old_rank, new_rank in sender_maps[gid]:
+                remapped[new_rank] = queued[old_rank]
+            if remapped.any():
+                g._explicit[new_gid] = remapped
+        g._gid_map = gid_map
+        g._sender_maps = sender_maps
         return g
 
 
@@ -635,10 +711,13 @@ class DESBackend:
 # ---------------------------------------------------------------------------
 
 # One entry is appended per TRACE of a stacked program (jit runs the
-# Python body only while compiling): the per-subgroup member/sender size
-# tuples plus the backend name.  The hot-path tests assert that a repeated
-# Group.run with the same static key leaves this list untouched, and the
-# stacked tests that a G-subgroup run appends exactly ONE entry.
+# Python body only while compiling): the padded stack shape
+# (G, N_max, S_max), the per-subgroup window tuple, and the backend name.
+# The hot-path tests assert that a repeated Group.run with the same static
+# key leaves this list untouched, the stacked tests that a G-subgroup run
+# appends exactly ONE entry, and the view-change soaks that a
+# shape-preserving reconfigure appends NONE (the per-subgroup sizes are
+# traced validity masks, not part of the key).
 TRACE_EVENTS: List[Tuple[Tuple[int, ...], Tuple[int, ...], str]] = []
 
 
@@ -734,30 +813,38 @@ def _stack_masks(members: Tuple[int, ...], senders: Tuple[int, ...]):
 
 
 @functools.lru_cache(maxsize=None)
-def _scan_program(members: Tuple[int, ...], senders: Tuple[int, ...],
-                  windows: Tuple[int, ...], null_send: bool, backend: str):
+def _scan_program(n_subgroups: int, n_max: int, s_max: int,
+                  windows: Tuple[int, ...], masked: bool, null_send: bool,
+                  backend: str):
     """Compile-once STACKED program for one whole-group scenario shape,
-    cached on the per-subgroup ``(members, senders, windows)`` signature
-    plus ``(null_send, backend)`` — the unit of compilation is the group,
-    not the subgroup: all G subgroups execute as one fused program
-    (:func:`sweep.run_stacked`), padded to a common (N_max, S_max) with
-    validity masks, with the cost model folded in as vectorized in-graph
-    arithmetic.  Repeated ``Group.run`` calls and benchmark sweeps reuse
-    the jitted program instead of re-tracing it.  (jax additionally keys
-    on the schedule shape, so a different round budget recompiles — same
-    scenario, same program.)"""
-    n_max, s_max = max(members), max(senders)
+    cached on the PADDED stack shape ``(G, N_max, S_max)`` plus the
+    per-subgroup windows and ``(null_send, backend)`` — the unit of
+    compilation is the group, not the subgroup: all G subgroups execute
+    as one fused program (:func:`sweep.run_stacked`), with the cost
+    model folded in as vectorized in-graph arithmetic.
+
+    The exact per-subgroup member/sender sizes are NOT in the key: when
+    ``masked``, they enter as traced ``(G, N_max)``/``(G, S_max)``
+    validity-mask inputs, so a view change that re-shapes subgroups
+    inside an unchanged padded stack — a member fails in one subgroup
+    while another still sets N_max — reuses the compiled program instead
+    of re-stacking from scratch (DESIGN.md Sec. 7).  Repeated
+    ``Group.run`` calls and benchmark sweeps reuse the jitted program
+    instead of re-tracing it.  (jax additionally keys on the schedule
+    shape, so a different round budget recompiles — same scenario, same
+    program.)"""
     ring = max(windows) if backend == "pallas" else 0
     receive_fn = _kernel_receive(ring) if backend == "pallas" else None
-    member_masks, sender_masks = _stack_masks(members, senders)
     win_arr = np.asarray(windows, np.int32)
 
-    def fn(scheds, costs):
-        TRACE_EVENTS.append((members, senders, backend))
-        states = sweep_mod.batch_states(n_max, s_max, len(members))
+    def fn(scheds, costs, *masks):
+        TRACE_EVENTS.append(((n_subgroups, n_max, s_max), windows,
+                             backend))
+        mm, sm = masks if masked else (None, None)
+        states = sweep_mod.batch_states(n_max, s_max, n_subgroups)
         _, (batches, app_pub, nulls) = sweep_mod.run_stacked(
             states, scheds, windows=win_arr, null_send=null_send,
-            member_masks=member_masks, sender_masks=sender_masks,
+            member_masks=mm, sender_masks=sm,
             receive_fn=receive_fn)
         round_t, round_w = jax.vmap(_fold_cost)(app_pub, costs)
         return batches, app_pub, nulls, round_t, round_w
@@ -800,26 +887,30 @@ def _batch_program(members: Tuple[int, ...], senders: Tuple[int, ...],
 
 
 @functools.lru_cache(maxsize=None)
-def _stream_program(members: Tuple[int, ...], senders: Tuple[int, ...],
-                    windows: Tuple[int, ...], null_send: bool,
-                    backend: str):
+def _stream_program(n_subgroups: int, n_max: int, s_max: int,
+                    windows: Tuple[int, ...], masked: bool,
+                    null_send: bool, backend: str):
     """Compile-once STREAMING program: ONE protocol round for all G
     subgroups of a scenario shape, carrying (states, backlogs) across
-    calls.  Same static key and same padded/masked stacking as
-    :func:`_scan_program`; the round arithmetic is the scan body itself
-    (:func:`repro.core.sweep.step_backlog`), so T streamed rounds are
-    bit-identical to one T-round scan fed the same ready rows.  A whole
-    streamed session — however many rounds — traces exactly once."""
+    calls.  Same padded-shape static key and same masked stacking as
+    :func:`_scan_program` — so a stream that survives a shape-preserving
+    view change (:meth:`GroupStream.reconfigure`) keeps dispatching the
+    SAME compiled program in the new epoch; the round arithmetic is the
+    scan body itself (:func:`repro.core.sweep.step_backlog`), so T
+    streamed rounds are bit-identical to one T-round scan fed the same
+    ready rows.  A whole streamed session — however many rounds, across
+    however many same-shape epochs — traces exactly once."""
     ring = max(windows) if backend == "pallas" else 0
     receive_fn = _kernel_receive(ring) if backend == "pallas" else None
-    member_masks, sender_masks = _stack_masks(members, senders)
     win_arr = np.asarray(windows, np.int32)
 
-    def fn(states, backlogs, ready):
-        TRACE_EVENTS.append((members, senders, backend))
+    def fn(states, backlogs, ready, *masks):
+        TRACE_EVENTS.append(((n_subgroups, n_max, s_max), windows,
+                             backend))
+        mm, sm = masks if masked else (None, None)
         return sweep_mod.stream_stacked(
             states, backlogs, ready, windows=win_arr, null_send=null_send,
-            member_masks=member_masks, sender_masks=sender_masks,
+            member_masks=mm, sender_masks=sm,
             receive_fn=receive_fn)
 
     return jax.jit(fn)
@@ -893,10 +984,16 @@ class GraphBackend:
         if cfg.subgroups:
             members, senders, windows, rounds, scheds, costs = \
                 self._stack(cfg, counts)
-            program = _scan_program(members, senders, windows,
+            member_masks, sender_masks = _stack_masks(members, senders)
+            masked = member_masks is not None
+            program = _scan_program(len(members), max(members),
+                                    max(senders), windows, masked,
                                     cfg.flags.null_send, self.name)
-            outs = [np.asarray(o) for o in
-                    program(jnp.asarray(scheds), jnp.asarray(costs))]
+            args = [jnp.asarray(scheds), jnp.asarray(costs)]
+            if masked:
+                args += [jnp.asarray(member_masks),
+                         jnp.asarray(sender_masks)]
+            outs = [np.asarray(o) for o in program(*args)]
             self._finalize(cfg, counts, outs, rounds, agg)
         return self._report(agg, wall0), agg.logs
 
@@ -1268,7 +1365,12 @@ class GroupStream:
         self._s = tuple(len(s.senders) for s in cfg.subgroups)
         self._w = tuple(s.window for s in cfg.subgroups)
         self.n_max, self.s_max = max(self._n), max(self._s)
-        self._program = _stream_program(self._n, self._s, self._w,
+        member_masks, sender_masks = _stack_masks(self._n, self._s)
+        self._mask_args: Tuple = () if member_masks is None else (
+            jnp.asarray(member_masks), jnp.asarray(sender_masks))
+        self._program = _stream_program(len(self._n), self.n_max,
+                                        self.s_max, self._w,
+                                        bool(self._mask_args),
                                         cfg.flags.null_send, be.name)
         self._states = sweep_mod.batch_states(self.n_max, self.s_max,
                                               len(self._n))
@@ -1277,6 +1379,19 @@ class GroupStream:
                                 for spec in cfg.subgroups]).astype(
                                     np.float32)
         self._enqueued = [np.zeros(s, np.int64) for s in self._s]
+        # virtual-synchrony epoch carry (DESIGN.md Sec. 7): the previous
+        # epoch's resend set starts out as this epoch's backlog — the
+        # undelivered tail re-publishes ahead of new traffic, per-sender
+        # FIFO intact — and counts as enqueued here (it must deliver in
+        # THIS view).
+        self.carry = group.carry
+        self.closed = False
+        if self.carry is not None:
+            backlogs0 = np.zeros((len(self._n), self.s_max), np.int32)
+            for g, resent in enumerate(self.carry.resend):
+                backlogs0[g, : len(resent)] = resent
+                self._enqueued[g] += resent.astype(np.int64)
+            self._backlogs = jnp.asarray(backlogs0)
         # running per-sender publish totals, kept host-side so watermark
         # queries (app_publish_index) answer the common "not published
         # yet" case in O(1) instead of re-scanning the round traces
@@ -1298,6 +1413,10 @@ class GroupStream:
         at sender rank ``s`` of subgroup ``g`` (padded lanes must be 0).
         Window-throttled messages are carried in the backlog, exactly as
         the scheduled scan does."""
+        if self.closed:
+            raise RuntimeError(
+                "stream closed by a view change; continue on the stream "
+                "reconfigure() returned")
         ready = np.asarray(ready, np.int32)
         if ready.shape != self.shape:
             raise ValueError(f"ready must be {self.shape}, got "
@@ -1309,7 +1428,8 @@ class GroupStream:
                     f"padded lanes {np.nonzero(ready[g, s_g:])[0] + s_g}")
             self._enqueued[g] += ready[g, :s_g].astype(np.int64)
         (self._states, self._backlogs), (batch, pub, nulls) = \
-            self._program(self._states, self._backlogs, jnp.asarray(ready))
+            self._program(self._states, self._backlogs, jnp.asarray(ready),
+                          *self._mask_args)
         pub, nulls = np.asarray(pub), np.asarray(nulls)
         self._batches.append(np.asarray(batch))
         self._app_pub.append(pub)
@@ -1349,16 +1469,30 @@ class GroupStream:
         return pub_before + int(k - (app_cum[r] - apps[r])) - 1
 
     def quiescent(self, view: Optional[StreamView] = None) -> bool:
-        """No backlog anywhere and every deliverable seq delivered by
-        every real member (the round-robin prefix of the published
-        counts — with null-send on this is everything published)."""
+        """No backlog anywhere and every PUBLISHED message delivered by
+        every real member.
+
+        Stricter than "the round-robin prefix is delivered": a sender
+        whose last window-throttled app publishes just as delivery
+        catches up sits beyond the rr prefix for a round or two until
+        the null-send scheme covers the lagging ranks — the prefix test
+        would call that quiescent and strand the message (the
+        virtual-synchrony resend tests caught exactly this timing).
+        With null-send on, an undelivered published message always makes
+        progress, so requiring ``delivered >= every sender's last
+        published seq`` still terminates; with null-send off it may
+        never hold, which the :meth:`finish` fixed-point exit handles."""
         v = self.view() if view is None else view
         for g, (n_g, s_g) in enumerate(zip(self._n, self._s)):
             if v.backlog[g, :s_g].any():
                 return False
-            deliverable = int(sst.rr_prefix(
-                v.published[g, :s_g].astype(np.int64))) - 1
-            if (v.delivered_num[g, :n_g] < deliverable).any():
+            counts = v.published[g, :s_g].astype(np.int64)
+            if not counts.any():
+                continue
+            ranks = np.arange(s_g)
+            last_seq = (counts - 1) * s_g + ranks
+            need = int(last_seq[counts > 0].max())
+            if (v.delivered_num[g, :n_g] < need).any():
                 return False
         return True
 
@@ -1377,6 +1511,10 @@ class GroupStream:
         scenarios that can never quiesce, e.g. ``null_send=False`` with
         uneven sender counts.  ``settle_max`` optionally caps the drain
         (the capped-off remainder reports as ``stalled``)."""
+        if self.closed:
+            raise RuntimeError(
+                "stream closed by a view change; finish the stream "
+                "reconfigure() returned")
         zeros = np.zeros(self.shape, np.int32)
         settled = 0
         while not self.quiescent():
@@ -1389,27 +1527,157 @@ class GroupStream:
                     (prev_states, prev_backlogs),
                     (self._states, self._backlogs)):
                 break                        # fixed point: done evolving
-        cfg = self.group.cfg
-        agg = _GraphAgg()
-        if self.rounds:
-            batches = np.stack(self._batches, axis=1)       # (G, T, N)
-            app_pub = np.stack(self._app_pub, axis=1)       # (G, T, S)
-            nulls = np.stack(self._nulls, axis=1)
-            round_t, round_w = jax.vmap(_fold_cost)(
-                jnp.asarray(app_pub), jnp.asarray(self._costs))
-            outs = [batches, app_pub, nulls,
-                    np.asarray(round_t), np.asarray(round_w)]
-            counts = {g: self._enqueued[g] for g in range(len(self._s))}
-            self.backend._finalize(cfg, counts, outs,
-                                   (self.rounds,) * len(self._n), agg)
-            if np.asarray(self._backlogs).any():
-                agg.stalled = True                # gave up with work queued
+        agg = self._aggregate()
+        if self.rounds and np.asarray(self._backlogs).any():
+            agg.stalled = True                # gave up with work queued
         report = self.backend._report(agg, self._wall0)
         report.extras["streamed_rounds"] = self.rounds
         self.group.delivery_logs = agg.logs
         self.group.last_report = report
         self.group._fire_upcalls()
         return report, agg.logs
+
+    def _aggregate(self, app_pub=None, nulls=None) -> _GraphAgg:
+        """Run the accumulated round traces through the exact
+        :class:`GraphBackend` post-processing a scheduled run uses.
+        ``app_pub``/``nulls`` accept already-stacked (G, T, S) traces so
+        the cut path, which needs them for the stable-apps computation
+        anyway, does not stack them twice."""
+        agg = _GraphAgg()
+        if self.rounds:
+            batches = np.stack(self._batches, axis=1)       # (G, T, N)
+            if app_pub is None:
+                app_pub = np.stack(self._app_pub, axis=1)   # (G, T, S)
+            if nulls is None:
+                nulls = np.stack(self._nulls, axis=1)
+            round_t, round_w = jax.vmap(_fold_cost)(
+                jnp.asarray(app_pub), jnp.asarray(self._costs))
+            outs = [batches, app_pub, nulls,
+                    np.asarray(round_t), np.asarray(round_w)]
+            counts = {g: self._enqueued[g] for g in range(len(self._s))}
+            self.backend._finalize(self.group.cfg, counts, outs,
+                                   (self.rounds,) * len(self._n), agg)
+        return agg
+
+    # -- the virtual-synchrony cut (view changes mid-stream) -----------------
+
+    def reconfigure(self, view: "views_mod.View") -> "GroupStream":
+        """Close this epoch at the virtual-synchrony cut and hand its
+        in-flight state to a new stream for ``view`` (DESIGN.md Sec. 7).
+
+        Wedge semantics: no settle rounds run — the cut is taken from the
+        SST watermarks exactly as they stand, like a real wedge that
+        cannot wait out a failed node.  Per subgroup the ragged trim is
+        the highest seq received by every SURVIVING member
+        (:func:`repro.core.sst.ragged_trim`); every surviving member's
+        delivery advances exactly TO the trim, so the closing epoch's
+        log is identical at every survivor (*everywhere* — and nobody
+        rolls back, because a member's delivered watermark is a min over
+        its stale view of the same monotone column), while everything
+        beyond the trim is delivered *nowhere*.  Undelivered app
+        messages of surviving senders — published-but-unstable plus the
+        window-throttled backlog — become the new stream's initial
+        backlog: the FIFO tail, resent in the new view.  A failed
+        sender's unstable messages die with it.
+
+        The closing epoch's cut-clipped logs and report are installed on
+        the owning Group and its upcalls fire, mirroring :meth:`finish`
+        (the report carries ``extras["view_change"]``).  The returned
+        stream belongs to ``self.group.reconfigure(view)`` and carries
+        an :class:`EpochCarry`; when the padded stack shape survives the
+        change it keeps dispatching the SAME cached one-round program —
+        a view change is a watermark hand-off, not a fresh-epoch
+        restart."""
+        if self.closed:
+            raise RuntimeError("stream already closed by a view change")
+        cfg = self.group.cfg
+        alive = set(view.members)
+        new_group = self.group.reconfigure(view)
+        gid_map, sender_maps = new_group._gid_map, new_group._sender_maps
+        received = np.asarray(self._states.received_num)    # (G, N_max)
+        t = self.rounds
+        app_pub = (np.stack(self._app_pub, axis=1) if t else
+                   np.zeros((len(self._n), 0, self.s_max), np.int64))
+        nulls = (np.stack(self._nulls, axis=1) if t else
+                 np.zeros((len(self._n), 0, self.s_max), np.int64))
+        cut_seqs: Dict[int, int] = {}
+        stable: Dict[int, np.ndarray] = {}
+        for gid, spec in enumerate(cfg.subgroups):
+            n_g, s_g = self._n[gid], self._s[gid]
+            alive_pos = np.asarray([m in alive for m in spec.members])
+            cut = sst.ragged_trim(received[gid, :n_g], alive_pos)
+            pubs_at_cut = sst.sender_counts(np.asarray(cut + 1), s_g)
+            stable[gid] = np.asarray(
+                [delivery_mod.apps_in_publish_prefix(
+                    app_pub[gid, :, s], nulls[gid, :, s],
+                    int(pubs_at_cut[s])) for s in range(s_g)], np.int64)
+            cut_seqs[gid] = cut
+        resend_t, stable_t, base_t, cut_t = [], [], [], []
+        for old_gid in sorted(gid_map):
+            new_gid = gid_map[old_gid]
+            s_new = len(new_group.cfg.subgroups[new_gid].senders)
+            resend = np.zeros(s_new, np.int64)
+            stb = np.zeros(s_new, np.int64)
+            base = np.zeros(s_new, np.int64)
+            for old_rank, new_rank in sender_maps[old_gid]:
+                stb[new_rank] = stable[old_gid][old_rank]
+                resend[new_rank] = (self._enqueued[old_gid][old_rank]
+                                    - stb[new_rank])
+                prev = (int(self.carry.app_base[old_gid][old_rank])
+                        if self.carry is not None else 0)
+                base[new_rank] = prev + stb[new_rank]
+            resend_t.append(resend)
+            stable_t.append(stb)
+            base_t.append(base)
+            cut_t.append(cut_seqs[old_gid])
+        new_group.carry = EpochCarry(
+            from_epoch=cfg.epoch, cut_seq=tuple(cut_t),
+            resend=tuple(resend_t), stable_apps=tuple(stable_t),
+            app_base=tuple(base_t))
+        self._close_at_cut(cut_seqs, alive, new_group.carry,
+                           app_pub, nulls)
+        return new_group.stream(backend=self.backend.name)
+
+    def _close_at_cut(self, cut_seqs: Dict[int, int], alive,
+                      carry: EpochCarry, app_pub, nulls) -> None:
+        """Finalize the closing epoch's logs/report with every surviving
+        member's delivery advanced to the ragged trim."""
+        cfg = self.group.cfg
+        agg = self._aggregate(app_pub, nulls)
+        for gid, spec in enumerate(cfg.subgroups):
+            log = agg.logs.get(gid)
+            if log is None:
+                continue
+            for node in spec.members:
+                if node in alive:
+                    log.delivered_seq[node] = cut_seqs[gid]
+        # re-derive the log-dependent accounting after the cut advance
+        # (the in-protocol numbers were computed from the pre-wedge
+        # watermarks; latency samples keep their in-protocol rounds —
+        # cut-advanced deliveries have no delivery round to sample)
+        agg.delivered_app = agg.delivered_null = 0
+        agg.per_node_bytes = {}
+        for gid, spec in enumerate(cfg.subgroups):
+            log = agg.logs.get(gid)
+            if log is None:
+                continue
+            for node in spec.members:
+                n_app, n_null = log.app_null_counts(node)
+                agg.delivered_app += n_app
+                agg.delivered_null += n_null
+                agg.per_node_bytes[node] = \
+                    agg.per_node_bytes.get(node, 0.0) + \
+                    n_app * spec.msg_size
+        report = self.backend._report(agg, self._wall0)
+        report.extras["streamed_rounds"] = self.rounds
+        report.extras["view_change"] = {
+            "cut_seq": {g: int(c) for g, c in cut_seqs.items()},
+            "resend_msgs": carry.total_resend(),
+        }
+        self.group.delivery_logs = agg.logs
+        self.group.last_report = report
+        self.group._fire_upcalls()
+        self.closed = True
 
 
 def _sum_delivered(logs: Mapping[int, DeliveryLog]) -> Tuple[int, int]:

@@ -161,6 +161,27 @@ def rr_prefix(counts) -> Array:
     return xp.squeeze(m, -1) * s + extra
 
 
+def ragged_trim(received_num, alive) -> int:
+    """The virtual-synchrony cut seq (paper Secs. 2.1, 3.3; DESIGN.md
+    Sec. 7): the highest seq received by EVERY surviving member.
+
+    received_num: (N,) per-member rr-prefix seq watermarks (the SST
+    ``received_num`` column); alive: (N,) bool — True for members of the
+    next view.  Messages with seq <= the trim are deliverable everywhere
+    among the survivors (each member's *delivered* watermark is a min
+    over its stale view of this column, so it can never exceed the trim
+    — wedging delivers FORWARD to the trim, it never rolls a survivor
+    back); messages beyond it are delivered nowhere and must be resent
+    in the next view.  With no survivors the trim is -1 (nothing is
+    stable for a view that no longer has observers).
+    """
+    received_num = np.asarray(received_num)
+    alive = np.asarray(alive, dtype=bool)
+    if not alive.any():
+        return -1
+    return int(received_num[alive].min())
+
+
 def sender_counts(seq_prefix, n_senders: int):
     """Inverse-ish of rr_prefix: per-sender message counts contained in the
     first ``seq_prefix`` messages of the round-robin order."""

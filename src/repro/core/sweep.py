@@ -231,7 +231,7 @@ def step_backlog(state: SweepState, backlog: Array, ready: Array, *,
 
 def scan_rounds(state: SweepState, app_schedule: Array, *,
                 window=1 << 30, null_send=True, receive_fn=None,
-                member_mask=None, sender_mask=None
+                member_mask=None, sender_mask=None, backlog0=None
                 ) -> Tuple[SweepState, Tuple[Array, Array, Array]]:
     """lax.scan over :func:`step_backlog` with full per-round traces.
 
@@ -242,6 +242,15 @@ def scan_rounds(state: SweepState, app_schedule: Array, *,
     (see :func:`sweep`).  ``receive_fn``, when given, must follow the
     3-arg contract ``(pub_vis, recv_counts, valid) -> new recv_counts``
     documented on :func:`sweep`.
+
+    ``backlog0`` is the epoch-carry initial backlog (DESIGN.md Sec. 7):
+    a new view's scan starts with the previous view's undelivered app
+    messages already queued — per-sender resend counts from the
+    virtual-synchrony cut — so they publish ahead of (well, merged
+    FIFO-consistently with) the new view's own schedule.  ``None`` means
+    a fresh epoch (zeros); a scan with ``backlog0=b`` is bit-identical
+    to one whose round-0 schedule row is incremented by ``b``
+    (``step_backlog`` merges ``backlog + ready`` before the sweep).
 
     Returns (final_state, (delivered_batches (T, N), app_published (T, S),
     nulls_published (T, S))) — everything delivery-log reconstruction and
@@ -256,7 +265,9 @@ def scan_rounds(state: SweepState, app_schedule: Array, *,
                             member_mask=member_mask,
                             sender_mask=sender_mask)
 
-    carry = (state, jnp.zeros((n_senders,), jnp.int32))
+    if backlog0 is None:
+        backlog0 = jnp.zeros((n_senders,), jnp.int32)
+    carry = (state, jnp.asarray(backlog0, jnp.int32))
     (state, _), traces = jax.lax.scan(body, carry, app_schedule)
     return state, traces
 
@@ -282,7 +293,7 @@ def batch_states(n_members: int, n_senders: int, batch: int) -> SweepState:
 
 def run_stacked(states: SweepState, app_schedules: Array, *, windows: Array,
                 null_send, member_masks=None, sender_masks=None,
-                receive_fn=None
+                receive_fn=None, backlogs0=None
                 ) -> Tuple[SweepState, Tuple[Array, Array, Array]]:
     """All G subgroups of one group scenario in a single fused scan.
 
@@ -292,32 +303,38 @@ def run_stacked(states: SweepState, app_schedules: Array, *, windows: Array,
     windows; null_send: one scalar flag (a group-level setting — traced
     OK); member_masks/sender_masks: (G, N_max)/(G, S_max) bool validity,
     or None when every subgroup already fills the padded shape (a
-    homogeneous stack skips the masked arithmetic entirely).
+    homogeneous stack skips the masked arithmetic entirely); backlogs0:
+    (G, S_max) int32 epoch-carry initial backlogs (the previous view's
+    resend counts — see :func:`scan_rounds`), or None for fresh epochs.
     Returns stacked final states and (G, T, ...) traces.
     """
-    if member_masks is None and sender_masks is None:
-        def one_unmasked(st, sched, w):
-            return scan_rounds(st, sched, window=w, null_send=null_send,
-                               receive_fn=receive_fn)
-
-        return jax.vmap(one_unmasked)(states, app_schedules,
-                                      jnp.asarray(windows))
-
     g, n_max = states.recv_counts.shape[0], states.recv_counts.shape[1]
     s_max = states.published.shape[1]
+    if backlogs0 is None:
+        backlogs0 = jnp.zeros((g, s_max), jnp.int32)
+    if member_masks is None and sender_masks is None:
+        def one_unmasked(st, sched, w, b0):
+            return scan_rounds(st, sched, window=w, null_send=null_send,
+                               receive_fn=receive_fn, backlog0=b0)
+
+        return jax.vmap(one_unmasked)(states, app_schedules,
+                                      jnp.asarray(windows),
+                                      jnp.asarray(backlogs0))
+
     if member_masks is None:
         member_masks = jnp.ones((g, n_max), bool)
     if sender_masks is None:
         sender_masks = jnp.ones((g, s_max), bool)
 
-    def one(st, sched, w, mm, sm):
+    def one(st, sched, w, mm, sm, b0):
         return scan_rounds(st, sched, window=w, null_send=null_send,
                            receive_fn=receive_fn, member_mask=mm,
-                           sender_mask=sm)
+                           sender_mask=sm, backlog0=b0)
 
     return jax.vmap(one)(states, app_schedules, jnp.asarray(windows),
                          jnp.asarray(member_masks),
-                         jnp.asarray(sender_masks))
+                         jnp.asarray(sender_masks),
+                         jnp.asarray(backlogs0))
 
 
 def stream_stacked(states: SweepState, backlogs: Array, ready: Array, *,

@@ -17,6 +17,14 @@ The protocol below is the standard monotone two-phase install driven
 through SST-style state: every row only ever increases, so acknowledgments
 coalesce and stale reads are harmless — which is precisely why it composes
 with the Spindle optimizations.
+
+The wedge/ragged-trim half of virtual synchrony — what happens to
+messages *underway* at the view change — lives where the in-flight state
+lives: :meth:`repro.core.group.GroupStream.reconfigure` computes the cut
+from the stream's SST watermarks (:func:`repro.core.sst.ragged_trim`)
+and carries the resend counts into the next view;
+:meth:`MembershipService.reconfigure_stream` drives that end-to-end
+(DESIGN.md Sec. 7).
 """
 
 from __future__ import annotations
@@ -87,6 +95,13 @@ class MembershipService:
     def request_join(self, node: int):
         if node not in self.view.members and node not in self.pending_joins:
             self.pending_joins.append(node)
+            # Joiner order (and hence the new view's rank assignment) must
+            # not depend on request arrival order — different nodes observe
+            # joins in different orders, and a dict/arrival-ordered list
+            # here would give them different views.  Keep the pending list
+            # canonically sorted so every replica of this state machine
+            # installs the identical View.
+            self.pending_joins.sort()
 
     # -- the two-phase monotone view change ---------------------------------
 
@@ -163,3 +178,28 @@ class MembershipService:
             return self.view, group
         view = self.propose_and_install(committed_steps)
         return view, group.reconfigure(view)
+
+    def reconfigure_stream(self, stream, committed_steps: Dict[int, int]):
+        """Drive one view change against a LIVE
+        :class:`repro.core.group.GroupStream`: wedge (two-phase install),
+        then hand the stream's in-flight state across the
+        virtual-synchrony cut (DESIGN.md Sec. 7).
+
+        Where :meth:`reconfigure` rebuilds a scheduled :class:`Group`
+        from scratch, this is the failure path the paper's robustness
+        claims rest on — messages underway at the view change are
+        delivered everywhere-or-nowhere at the ragged trim
+        (:func:`repro.core.sst.ragged_trim` over the stream's SST
+        watermarks) and the undelivered remainder is resent by the
+        surviving senders in the new view (the new stream starts with
+        those resend counts as its backlog).
+
+        Returns ``(view, new_stream)``; ``new_stream is stream`` when no
+        change was pending.  The old stream is closed: its epoch's
+        delivery logs (cut-clipped) and report are installed on its
+        owning Group exactly as ``finish()`` would.
+        """
+        if not self.needs_change():
+            return self.view, stream
+        view = self.propose_and_install(committed_steps)
+        return view, stream.reconfigure(view)

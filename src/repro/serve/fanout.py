@@ -35,11 +35,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 import numpy as np
 
 from repro.core import dds
+from repro.core import views as views_mod
 from repro.core.group import RunReport
 from repro.serve.engine import ServeEngine
 
@@ -105,6 +107,10 @@ class ReplicatedEngine:
         self.free_rounds: List[Tuple[int, int, int]] = []    # (g, s, rnd)
         self.stall_rounds = 0
         self.last_report: Optional[RunReport] = None
+        # mid-run view changes (fail_at): one entry per installed view —
+        # (engine round, View, closing-epoch report, {topic: cut log})
+        self.view_log: List[Tuple[int, "views_mod.View", RunReport,
+                                  Dict[str, object]]] = []
 
     # -- bookkeeping ---------------------------------------------------------
 
@@ -118,6 +124,8 @@ class ReplicatedEngine:
         self.finish_rounds = []
         self.free_rounds = []
         self.stall_rounds = 0
+        self.view_log = []
+        self._failed: set = set()
 
     def _sync_holds(self, stream, view, round_no: int):
         """Pin each pending hold to its last app message's publish index
@@ -136,13 +144,52 @@ class ReplicatedEngine:
                     del self._holds[g][slot]
                     self.free_rounds.append((g, slot, round_no))
 
+    def _fail_subscribers(self, bound: dds.BoundDomain,
+                          nodes: Sequence[int], round_no: int
+                          ) -> dds.BoundDomain:
+        """Install a new view without the given subscriber nodes and
+        re-pin every pending slot hold against the new epoch.
+
+        The cut (``GroupStream.reconfigure`` under the bound domain)
+        restarts per-sender publish numbering, so a hold's
+        ``target_apps`` — the k-th app publish its release waits on — is
+        rebased by the apps that went STABLE at the cut
+        (``EpochCarry.stable_apps``): if its last message was already
+        delivered everywhere the hold frees right here; otherwise the
+        remainder rides the resend backlog and the hold re-pins from the
+        new epoch's traces (``last_idx`` reset).  The engine-side
+        enqueued counters rebase identically, keeping them equal to the
+        new stream's epoch-local enqueued counts."""
+        self._failed |= set(nodes)
+        members = tuple(sorted(set(range(self.domain.n_nodes))
+                               - self._failed))
+        vid = len(self.view_log) + 1
+        view = views_mod.View(vid=vid, members=members, senders=members)
+        new_bound, old_report, old_logs = bound.reconfigure(view)
+        carry = new_bound.stream.carry
+        for g in range(len(self.engines)):
+            delta = np.zeros(self._slots[g], np.int64)
+            stable = carry.stable_apps[g]
+            delta[: len(stable)] = stable
+            self._apps_enqueued[g] = self._apps_enqueued[g] - delta
+            for slot, hold in list(self._holds[g].items()):
+                hold.target_apps -= int(delta[slot])
+                hold.last_idx = None            # old-epoch index is void
+                if hold.target_apps <= 0:       # stable at the cut: free
+                    del self._holds[g][slot]
+                    self.free_rounds.append((g, slot, round_no))
+        self.view_log.append((round_no, view, old_report, old_logs))
+        return new_bound
+
     # -- the fused serve+multicast loop --------------------------------------
 
     def submit(self, replica: int, req) -> None:
         self.engines[replica].submit(req)
 
     def run(self, *, max_rounds: int = 10_000,
-            settle_max: Optional[int] = None) -> RunReport:
+            settle_max: Optional[int] = None,
+            fail_at: Optional[Mapping[int, Sequence[int]]] = None
+            ) -> RunReport:
         """Drive every replica to drain, one multicast round per engine
         round, then settle the multicast and return the merged report.
 
@@ -151,8 +198,31 @@ class ReplicatedEngine:
         a whole run appends a single ``TRACE_EVENTS`` entry).  Admission
         into a freed slot is gated on the delivery watermark; requests
         queue behind held slots rather than overwrite undelivered ring
-        state."""
+        state.
+
+        ``fail_at`` maps an engine round to SUBSCRIBER node ids that
+        fail after that round's multicast dispatch: the serve plane then
+        survives a mid-stream view change through the virtual-synchrony
+        cut (DESIGN.md Sec. 7) — in-flight admissions/tokens are
+        delivered everywhere at the ragged trim or resent in the new
+        view's stream, and every pending slot hold is RE-PINNED against
+        the new epoch's watermarks (its target rebased by the apps that
+        went stable at the cut; a hold whose last message was already
+        stable frees immediately).  Slot (publisher) nodes cannot fail:
+        a slot IS an engine KV slot, and killing one would shrink the
+        engine itself — see DESIGN.md Sec. 8 (Deviations).  Each
+        installed view is recorded in :attr:`view_log` with the closing
+        epoch's report and cut-clipped per-topic logs."""
         self._reset_run_state()
+        fail_at = dict(fail_at or {})
+        slot_nodes = {p for t in self.topics for p in t.publishers}
+        for rnd, nodes in fail_at.items():
+            bad = set(nodes) & slot_nodes
+            if bad:
+                raise ValueError(
+                    f"fail_at round {rnd} names slot (publisher) nodes "
+                    f"{sorted(bad)}; only subscriber nodes may fail — "
+                    "slots are the engine's KV slots")
         bound = self.domain.bind(backend=self.backend)
         wall0 = time.perf_counter()
         # serve metrics are per-RUN deltas: engines accumulate completed
@@ -189,7 +259,16 @@ class ReplicatedEngine:
                 counts_by_topic[self.topics[g].name] = c
             view = bound.push_round(counts_by_topic)
             self._sync_holds(bound.stream, view, round_no)
+            if round_no in fail_at:
+                bound = self._fail_subscribers(bound, fail_at[round_no],
+                                               round_no)
             round_no += 1
+        unreached = sorted(r for r in fail_at if r >= round_no)
+        if unreached:
+            raise ValueError(
+                f"fail_at rounds {unreached} were never reached (the "
+                f"engines drained after {round_no} rounds) — the failure "
+                "path would be silently untested")
         report, logs = bound.finish(settle_max=settle_max)
         # release holds the settle rounds delivered — including holds
         # whose last app message was still window-throttled when the
@@ -213,6 +292,7 @@ class ReplicatedEngine:
             "tokens_per_s": tokens / wall if wall > 0 else 0.0,
             "stall_rounds": self.stall_rounds,
             "held_slots": sum(len(h) for h in self._holds),
+            "view_changes": len(self.view_log),
             "wall_s": wall,
         }
         self.last_report = report

@@ -1,0 +1,537 @@
+"""Virtual-synchrony cut: in-flight resend across view changes
+(paper Secs. 2.1, 3.3; DESIGN.md Sec. 7).
+
+The failure-path suite the robustness claims rest on.  Covers, bottom-up:
+
+* the cut arithmetic: ``sst.ragged_trim`` (stable-delivery frontier over
+  survivors) and ``delivery.apps_in_publish_prefix`` (per-sender stable
+  app counts from the round traces);
+* epoch-carry execution: ``sweep.scan_rounds(backlog0=)`` is
+  bit-identical to merging the carry into the first schedule row, and a
+  carried ``GroupStream`` resumes from the same arithmetic;
+* deterministic view installs: joiner rank assignment must not depend on
+  join request arrival order;
+* ``Group.reconfigure`` carries queued explicit sends and REUSES the
+  cached stacked program when the padded ``(G, N_max, S_max)`` shape
+  survives the change (the re-stack-from-scratch regression);
+* the cut invariant, seeded (hypothesis is not installed): for random
+  membership/suspicion/join schedules driven through
+  ``MembershipService``, every in-flight message is delivered in exactly
+  one view, everywhere-or-nowhere, with per-sender FIFO preserved across
+  cuts — graph and pallas bit-identical, the drained final epoch
+  order-invariant conformant with a des run of the same counts;
+* multi-view soaks (``-m soak``): >=8 consecutive view changes under
+  continuous streamed traffic on graph AND pallas with NO fresh-epoch
+  restart — bounded TRACE_EVENTS, monotone app watermarks across cuts;
+* the serve plane: ``ReplicatedEngine`` survives a mid-run subscriber
+  failure with slot holds re-pinned against the new epoch's watermarks.
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import delivery, group as group_mod, sst
+from repro.core import sweep as sweep_mod
+
+import jax.numpy as jnp
+
+fast = pytest.mark.fast
+soak = pytest.mark.soak
+
+
+# ---------------------------------------------------------------------------
+# cut arithmetic
+# ---------------------------------------------------------------------------
+
+
+@fast
+def test_ragged_trim_over_survivors():
+    col = np.array([7, 4, 9, 2])
+    assert sst.ragged_trim(col, [True] * 4) == 2
+    assert sst.ragged_trim(col, [True, True, True, False]) == 4
+    assert sst.ragged_trim(col, [False, True, False, False]) == 4
+    assert sst.ragged_trim(col, [False] * 4) == -1
+
+
+@fast
+def test_apps_in_publish_prefix_counts_apps_before_nulls():
+    # rounds publish (apps, nulls): (2,1), (0,2), (3,0)
+    app_pub, nulls = np.array([2, 0, 3]), np.array([1, 2, 0])
+    want = [0, 1, 2, 2, 2, 2, 3, 4, 5]     # apps among first k publishes
+    got = [delivery.apps_in_publish_prefix(app_pub, nulls, k)
+           for k in range(9)]
+    assert got == want
+    # seeded property: consistent with a brute-force publish replay
+    rng = np.random.default_rng(7)
+    for _ in range(25):
+        t = int(rng.integers(1, 9))
+        a, n = rng.integers(0, 4, t), rng.integers(0, 3, t)
+        flat = []
+        for r in range(t):
+            flat += [True] * int(a[r]) + [False] * int(n[r])
+        for k in (0, len(flat) // 2, len(flat)):
+            assert delivery.apps_in_publish_prefix(a, n, k) == \
+                sum(flat[:k])
+
+
+@fast
+def test_scan_backlog0_is_bit_identical_to_schedule_head_merge():
+    """The epoch-carry contract: starting a scan with the previous view's
+    resend counts queued equals merging them into round 0's schedule row
+    (step_backlog merges backlog + ready) — so resent messages keep
+    per-sender FIFO order ahead of new traffic by construction."""
+    rng = np.random.default_rng(20260730)
+    for _ in range(10):
+        s = int(rng.integers(1, 4))
+        n = int(rng.integers(s, 5))
+        sched = rng.integers(0, 3, size=(10, s)).astype(np.int32)
+        b0 = rng.integers(0, 4, size=s).astype(np.int32)
+        window = int(rng.choice([2, 4, 1 << 20]))
+        _, tr_carry = sweep_mod.scan_rounds(
+            sweep_mod.SweepState.init(n, s), jnp.asarray(sched),
+            window=window, backlog0=jnp.asarray(b0))
+        merged = sched.copy()
+        merged[0] += b0
+        _, tr_merged = sweep_mod.scan_rounds(
+            sweep_mod.SweepState.init(n, s), jnp.asarray(merged),
+            window=window)
+        for a, b in zip(tr_carry, tr_merged):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# deterministic view installs
+# ---------------------------------------------------------------------------
+
+
+@fast
+def test_joiner_rank_assignment_is_arrival_order_independent():
+    """Two replicas of the membership state machine that observe the same
+    joins/suspicions in DIFFERENT orders must install the identical view
+    (same members, same joiners tuple, same rank for every node)."""
+    a = api.MembershipService([0, 1, 2, 3])
+    b = api.MembershipService([0, 1, 2, 3])
+    for j in (7, 5, 9):
+        a.request_join(j)
+    for j in (9, 7, 5):
+        b.request_join(j)
+    a.suspect(0, 2)
+    b.suspect(1, 2)                        # different reporter, same truth
+    va = a.propose_and_install({m: 1 for m in range(4)})
+    vb = b.propose_and_install({m: 1 for m in range(4)})
+    assert va == vb
+    assert va.joiners == (5, 7, 9)
+    for node in va.members:
+        assert va.rank(node) == vb.rank(node)
+
+
+# ---------------------------------------------------------------------------
+# Group.reconfigure: explicit-send carry + program-cache reuse
+# ---------------------------------------------------------------------------
+
+
+@fast
+def test_reconfigure_carries_queued_explicit_sends_across_backends():
+    """Queued-but-never-sent messages are the head of the resend set:
+    they survive the view change remapped to surviving sender ranks (a
+    failed sender's queue dies with it) and run identically on every
+    backend."""
+    spec = api.SubgroupSpec(members=(0, 1, 2, 3), senders=(0, 1, 2),
+                            msg_size=256, window=8, n_messages=5)
+    base = api.Group(api.GroupConfig(members=(0, 1, 2, 3),
+                                     subgroups=(spec,)))
+    base.subgroup(0).send(sender=0, n=4)
+    base.subgroup(0).send(sender=2, n=6)   # sender 2 will fail
+    g2 = base.reconfigure(api.View(vid=1, members=(0, 1, 3),
+                                   senders=(0, 1, 3)))
+    assert np.array_equal(g2._explicit[0], [4, 0])
+    delivered = {}
+    for backend in ("des", "graph", "pallas"):
+        g = api.Group(g2.cfg)
+        g._explicit = {k: v.copy() for k, v in g2._explicit.items()}
+        r = g.run(backend=backend)
+        assert r.delivered_app_msgs == 3 * 4, backend
+        delivered[backend] = [g.subgroup(0).delivered(n)
+                              for n in (0, 1, 3)]
+    assert delivered["des"] == delivered["graph"] == delivered["pallas"]
+
+
+@fast
+def test_reconfigure_same_padded_shape_reuses_cached_program():
+    """The re-stack-from-scratch regression: a view change that
+    re-shapes one subgroup INSIDE an unchanged padded (G, N_max, S_max)
+    stack must reuse the cached stacked program (sizes are traced
+    validity masks now, not static key parts) — both for scheduled runs
+    and for a live stream crossing the cut."""
+    spec_a = api.SubgroupSpec(members=(0, 1, 2, 3), senders=(0, 1),
+                              msg_size=512, window=8, n_messages=12)
+    spec_b = api.SubgroupSpec(members=(0, 1, 4), senders=(0,),
+                              msg_size=256, window=8, n_messages=3)
+    cfg = api.GroupConfig(members=(0, 1, 2, 3, 4),
+                          subgroups=(spec_a, spec_b))
+    g = api.Group(cfg)
+    g.run(backend="graph")                     # warm the program cache
+    before = len(group_mod.TRACE_EVENTS)
+    # node 4 is a non-sender member of B only: B shrinks (3 -> 2
+    # members) but A still sets N_max=4, S_max=2 — padded shape intact
+    g2 = g.reconfigure(api.View(vid=1, members=(0, 1, 2, 3),
+                                senders=(0, 1, 2, 3)))
+    r = g2.run(backend="graph")
+    assert len(group_mod.TRACE_EVENTS) == before, \
+        "same-padded-shape reconfigure re-stacked from scratch"
+    assert not r.stalled
+
+    # streaming: the cut hands the SAME cached one-round program on
+    stream = api.Group(cfg).stream(backend="graph")
+    ready = np.zeros(stream.shape, np.int32)
+    ready[0, :2] = 2
+    ready[1, 0] = 1
+    for _ in range(3):
+        stream.step(ready)
+    n0 = len(group_mod.TRACE_EVENTS)
+    s2 = stream.reconfigure(api.View(vid=1, members=(0, 1, 2, 3),
+                                     senders=(0, 1, 2, 3)))
+    assert s2.carry is not None and s2.carry.total_resend() > 0
+    ready2 = np.zeros(s2.shape, np.int32)
+    ready2[0, :2] = 1
+    s2.step(ready2)
+    s2.finish()
+    assert len(group_mod.TRACE_EVENTS) == n0, \
+        "mid-stream cut re-traced a shape-preserving epoch"
+    with pytest.raises(RuntimeError, match="closed"):
+        stream.step(ready)
+    with pytest.raises(RuntimeError, match="closed"):
+        stream.finish()
+
+
+# ---------------------------------------------------------------------------
+# the cut invariant (seeded property tests — hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+# Nodes 1 and 2 never fail, so both subgroups always survive and gid
+# numbering is stable across every schedule (gid_map stays the identity).
+_A = dict(members=(0, 1, 2, 3), senders=(0, 1, 2))
+_B = dict(members=(1, 2, 3), senders=(1, 2))
+_EVENTS = (("fail", 3), ("fail", 0), ("join", 6))
+
+
+def _vc_group():
+    spec_a = api.SubgroupSpec(msg_size=512, window=4, n_messages=0, **_A)
+    spec_b = api.SubgroupSpec(msg_size=256, window=4, n_messages=0, **_B)
+    return api.Group(api.GroupConfig(members=(0, 1, 2, 3, 4),
+                                     subgroups=(spec_a, spec_b)))
+
+
+def _sender_apps(log, node, spec):
+    """Delivered app counts at ``node`` keyed by sender NODE id, asserting
+    per-sender FIFO (indices strictly increasing) on the way."""
+    counts, last = {}, {}
+    for rank, idx, _ in log.sequence(node):
+        assert idx > last.get(rank, -1), "per-sender FIFO violated"
+        last[rank] = idx
+        node_id = spec.senders[rank]
+        counts[node_id] = counts.get(node_id, 0) + 1
+    return counts
+
+
+def _drive_schedule(seed, backend):
+    """One random membership/suspicion/join schedule under continuous
+    in-flight traffic.  Returns (epochs, enqueued_by_node, failed) where
+    epochs = [(specs, logs, alive_then, carry_out)] oldest first, the
+    last entry being the drained final epoch (carry_out None)."""
+    rng = np.random.default_rng(seed)
+    ms = api.MembershipService([0, 1, 2, 3, 4])
+    stream = _vc_group().stream(backend=backend)
+    enqueued = {}                       # (gid, sender node) -> total apps
+    failed = set()
+    events = [_EVENTS[i] for i in rng.permutation(3)[:2]]
+    cut_rounds = sorted(rng.choice(np.arange(2, 9), size=2,
+                                   replace=False))
+    epochs = []
+    for rnd in range(10):
+        specs = stream.group.cfg.subgroups
+        ready = np.zeros(stream.shape, np.int32)
+        for g, spec in enumerate(specs):
+            for rank, node in enumerate(spec.senders):
+                if node in failed:
+                    continue
+                c = int(rng.integers(0, 3))
+                ready[g, rank] = c
+                enqueued[(g, node)] = enqueued.get((g, node), 0) + c
+        stream.step(ready)
+        if rnd in cut_rounds:
+            kind, node = events.pop(0)
+            if kind == "fail":
+                ms.suspect(1, node)
+                failed.add(node)
+            else:
+                ms.request_join(node)
+            old_group, old_specs = stream.group, specs
+            view, stream = ms.reconfigure_stream(stream, {})
+            assert stream.group is not old_group
+            epochs.append((old_specs, old_group.delivery_logs,
+                           set(view.members), stream.carry))
+    report, logs = stream.finish()
+    assert not report.stalled
+    epochs.append((stream.group.cfg.subgroups, logs,
+                   set(stream.group.cfg.members), None))
+    return epochs, enqueued, failed, stream
+
+
+@fast
+@pytest.mark.parametrize("backend", ["graph", "pallas"])
+def test_cut_invariant_seeded_everywhere_or_nowhere(backend):
+    """For random membership/suspicion/join schedules: every app message
+    is delivered in exactly one view, everywhere-or-nowhere among that
+    view's survivors, per-sender FIFO preserved across cuts; a failed
+    sender loses exactly a FIFO *tail* (nowhere), never a middle."""
+    for seed in (11, 23, 47):
+        epochs, enqueued, failed, _ = _drive_schedule(seed, backend)
+        delivered = {}                  # (gid, sender node) -> apps, @obs
+        for e, (specs, logs, alive, carry) in enumerate(epochs):
+            final = carry is None
+            for gid, spec in enumerate(specs):
+                log = logs[gid]
+                survivors = [m for m in spec.members if m in alive]
+                # everywhere-or-nowhere: identical app sequence at every
+                # member surviving the epoch boundary
+                seqs = [log.sequence(node) for node in survivors]
+                assert all(s == seqs[0] for s in seqs[1:]), \
+                    (seed, e, gid)
+                per_node = _sender_apps(log, survivors[0], spec)
+                for node_id, c in per_node.items():
+                    key = (gid, node_id)
+                    delivered[key] = delivered.get(key, 0) + c
+                if not final:
+                    # the epoch delivered exactly its stable prefix: the
+                    # carry's stable_apps IS the per-sender delta
+                    new_specs = epochs[e + 1][0]
+                    for rank, node_id in enumerate(
+                            new_specs[gid].senders):
+                        assert per_node.get(node_id, 0) == \
+                            int(carry.stable_apps[gid][rank]), \
+                            (seed, e, gid, node_id)
+        for (gid, node_id), total in enqueued.items():
+            got = delivered.get((gid, node_id), 0)
+            if node_id in failed:
+                # unstable tail of a failed sender: delivered nowhere
+                assert got <= total, (seed, gid, node_id)
+            else:
+                assert got == total, (seed, gid, node_id)
+
+
+@fast
+def test_cut_schedules_bit_identical_graph_vs_pallas_and_des_conformant():
+    """graph and pallas agree bit-identically on every epoch of a random
+    cut schedule (logs AND carries); the drained final epoch is
+    order-invariant conformant with a des run of the same counts."""
+    for seed in (5, 31):
+        results = {}
+        for backend in ("graph", "pallas"):
+            epochs, enqueued, failed, stream = _drive_schedule(
+                seed, backend)
+            results[backend] = (epochs, stream)
+        (eg, sg), (ep, sp) = results["graph"], results["pallas"]
+        assert len(eg) == len(ep)
+        for (specs_g, logs_g, alive_g, carry_g), \
+                (specs_p, logs_p, alive_p, carry_p) in zip(eg, ep):
+            assert specs_g == specs_p and alive_g == alive_p
+            for gid in logs_g:
+                assert logs_g[gid].delivered_seq == \
+                    logs_p[gid].delivered_seq
+                for x, y in zip(logs_g[gid].is_app, logs_p[gid].is_app):
+                    np.testing.assert_array_equal(x, y)
+            if carry_g is not None:
+                for rg, rp in zip(carry_g.resend, carry_p.resend):
+                    np.testing.assert_array_equal(rg, rp)
+                for bg, bp in zip(carry_g.app_base, carry_p.app_base):
+                    np.testing.assert_array_equal(bg, bp)
+        # des conformance of the resent final epoch: same per-sender app
+        # counts at every member, per-sender FIFO merge (asserted by
+        # _sender_apps); send timing differs (stream bursts + cut carry
+        # vs paced schedule), so sequences are compared order-invariantly
+        final_specs, final_logs, _, _ = eg[-1]
+        g_des = api.Group(sg.group.cfg)
+        for gid, spec in enumerate(final_specs):
+            for rank, node in enumerate(spec.senders):
+                g_des.subgroup(gid).send(
+                    sender=node, n=int(sg._enqueued[gid][rank]))
+        g_des.run(backend="des")
+        for gid, spec in enumerate(final_specs):
+            for node in spec.members:
+                assert _sender_apps(final_logs[gid], node, spec) == \
+                    _sender_apps(g_des.delivery_logs[gid], node, spec), \
+                    (seed, gid, node)
+
+
+# ---------------------------------------------------------------------------
+# multi-view soaks (-m soak): no fresh-epoch restart
+# ---------------------------------------------------------------------------
+
+
+@soak
+@pytest.mark.parametrize("backend", ["graph", "pallas"])
+def test_eight_view_soak_no_fresh_epoch_restart(backend):
+    """>=8 consecutive view changes under continuous in-flight traffic:
+    the stream survives every cut on the SAME cached program (bounded
+    TRACE_EVENTS — the per-subgroup shapes are unchanged, so no
+    fresh-epoch restart), per-sender app watermarks are monotone across
+    cuts, and at the end every enqueued message was delivered exactly
+    once at every member."""
+    spec_a = api.SubgroupSpec(members=(0, 1, 2, 3), senders=(0, 1),
+                              msg_size=512, window=4, n_messages=0)
+    spec_b = api.SubgroupSpec(members=(0, 1, 2), senders=(0,),
+                              msg_size=256, window=4, n_messages=0)
+    g = api.Group(api.GroupConfig(members=(0, 1, 2, 3, 4, 5),
+                                  subgroups=(spec_a, spec_b)))
+    ms = api.MembershipService(g.cfg.members)
+    stream = g.stream(backend=backend)
+    n0 = len(group_mod.TRACE_EVENTS)
+    rng = np.random.default_rng(99)
+    enqueued = np.zeros((2, 2), np.int64)          # (gid, rank)
+    stable_seen = np.zeros((2, 2), np.int64)
+    prev_base = [np.zeros(2, np.int64), np.zeros(1, np.int64)]
+    epochs = []
+    n_views = 8
+    for v in range(n_views):
+        for _ in range(3):                          # in-flight traffic
+            ready = np.zeros(stream.shape, np.int32)
+            for g_, s_ in ((0, 0), (0, 1), (1, 0)):
+                c = int(rng.integers(0, 3))
+                ready[g_, s_] = c
+                enqueued[g_, s_] += c
+            stream.step(ready)
+        # nodes 4/5 are OUTSIDE every subgroup: failing/joining them
+        # rolls the epoch (a full wedge+cut) without re-shaping the stack
+        if v % 2 == 0:
+            ms.suspect(0, 4)
+        else:
+            ms.request_join(4)
+        old_group = stream.group
+        view, stream = ms.reconfigure_stream(stream, {})
+        assert view.vid == v + 1
+        carry = stream.carry
+        epochs.append((old_group.delivery_logs, carry))
+        # monotone watermarks across cuts: the cumulative app base never
+        # regresses, and advances by exactly this epoch's stable delta
+        for gid in (0, 1):
+            base = carry.app_base[gid]
+            assert (base >= prev_base[gid]).all(), (backend, v, gid)
+            np.testing.assert_array_equal(
+                base, prev_base[gid] + carry.stable_apps[gid])
+            prev_base[gid] = base.copy()
+        s_a = carry.stable_apps[0]
+        stable_seen[0, : len(s_a)] += s_a
+        stable_seen[1, 0] += int(carry.stable_apps[1][0])
+        # every epoch resends exactly what was not yet stable
+        resent = sum(int(r.sum()) for r in carry.resend)
+        assert resent == int(enqueued.sum() - stable_seen.sum()), \
+            (backend, v)
+    report, logs = stream.finish()
+    assert not report.stalled
+    # no fresh-epoch restart: one trace for the WHOLE soak at most (0
+    # when an earlier test already cached this shape's program)
+    assert len(group_mod.TRACE_EVENTS) - n0 <= 1, \
+        f"{backend} soak re-traced across view changes"
+    # exactly-once: over all epochs, every member of each subgroup
+    # delivered each sender's full enqueued sequence, no loss, no dupes
+    epochs.append((logs, None))
+    for gid, spec in enumerate(stream.group.cfg.subgroups):
+        for pos, node in enumerate(spec.members):
+            per_rank = np.zeros(len(spec.senders), np.int64)
+            for ep_logs, _ in epochs:
+                log = ep_logs.get(gid)      # {} = an epoch with no rounds
+                for rank, idx, _ in (log.sequence(node) if log else ()):
+                    per_rank[rank] += 1
+            np.testing.assert_array_equal(
+                per_rank, enqueued[gid, : len(spec.senders)],
+                err_msg=f"{backend} gid={gid} node={node}")
+
+
+# ---------------------------------------------------------------------------
+# serve plane: mid-run subscriber failure
+# ---------------------------------------------------------------------------
+
+
+def _fan_engines():
+    import jax
+    from repro.models import layers, registry
+    from repro.models.config import ModelConfig
+    from repro.models.runtime import Runtime
+    from repro.serve.engine import EngineConfig, ServeEngine
+
+    cfg = ModelConfig(name="viewchange-test", family="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=512, head_dim=32, tie_embeddings=True)
+    registry.register("viewchange-test", lambda: cfg)
+    params = layers.init_tree(registry.param_specs(cfg),
+                              jax.random.key(0))
+    from repro.models.runtime import Runtime as _R
+    return [ServeEngine("viewchange-test", params, cfg,
+                        EngineConfig(max_batch=2, max_len=48), _R())
+            for _ in range(2)], cfg
+
+
+def test_replicated_engine_survives_subscriber_failure_midrun():
+    """A replica's subscriber fails mid-run: the serve session crosses
+    the cut with slot holds re-pinned against the new epoch's watermarks
+    — every request completes, every hold releases, tokens and per-epoch
+    logs are bit-identical graph vs pallas, and the surviving subscriber
+    observes every admission/token app message exactly once across the
+    two epochs."""
+    from repro.serve.engine import Request
+    from repro.serve.fanout import ReplicatedEngine
+
+    engines, mcfg = _fan_engines()
+    results = {}
+    for backend in ("graph", "pallas"):
+        rep = ReplicatedEngine(engines, subscribers_per_replica=2,
+                               window=4, backend=backend)
+        rep.reset()
+        rng = np.random.default_rng(3)
+        for g in range(2):
+            for i in range(3):
+                rep.submit(g, Request(
+                    rid=g * 10 + i,
+                    prompt=rng.integers(0, mcfg.vocab_size, 3,
+                                        dtype=np.int32),
+                    max_new_tokens=4))
+        # node 3 = second subscriber of replica-0's topic (slots 0,1 +
+        # subscribers 2,3); fail it while tokens are in flight
+        report = rep.run(fail_at={2: [3]})
+        serve = report.extras["serve"]
+        assert serve["view_changes"] == 1
+        assert serve["drained"] and serve["requests"] == 6
+        assert serve["tokens"] == 6 * 4
+        assert serve["held_slots"] == 0
+        # holds re-pinned, all released; no slot freed before its finish
+        first_finish, first_free = {}, {}
+        for g, slot, rnd in rep.finish_rounds:
+            first_finish.setdefault((g, slot), rnd)
+        for g, slot, rnd in rep.free_rounds:
+            first_free.setdefault((g, slot), rnd)
+        assert set(first_finish) == set(first_free)
+        for key, fin in first_finish.items():
+            assert first_free[key] >= fin
+        results[backend] = (rep.completed(), rep.view_log,
+                            report.extras["delivery_logs"])
+    (tok_g, views_g, logs_g) = results["graph"]
+    (tok_p, views_p, logs_p) = results["pallas"]
+    assert tok_g == tok_p
+    for (rn_g, v_g, _, old_g), (rn_p, v_p, _, old_p) in zip(views_g,
+                                                            views_p):
+        assert rn_g == rn_p and v_g == v_p
+        assert set(old_g) == set(old_p)
+        for name in old_g:
+            assert old_g[name].delivered_seq == old_p[name].delivered_seq
+    # exactly-once at the SURVIVING subscriber of replica 0 (node 2):
+    # old-epoch stable prefix + final-epoch (resend + new) = everything
+    _, _, old_report, old_logs = views_g[0]
+    assert old_report.extras["view_change"]["resend_msgs"] > 0
+    per_slot = np.zeros(2, np.int64)
+    for log in (old_logs["replica-0"], logs_g["replica-0"]):
+        for rank, idx, _ in log.sequence(2):
+            per_slot[rank] += 1
+    # replica 0 served 3 requests x (1 admission + 4 tokens) app msgs
+    assert int(per_slot.sum()) == 3 * 5
