@@ -29,18 +29,21 @@ program cache), :mod:`repro.core.simulator` (flags/specs + the DES),
 from repro.core.costmodel import HOST_X86, RDMA_CX6, TPU_ICI
 from repro.core.dds import (BoundDomain, Domain, QoS, Topic,
                             many_topic_domain, single_topic_domain)
-from repro.core.group import (BACKENDS, Delivery, DeliveryLog, DESBackend,
-                              EpochCarry, GraphBackend, Group, GroupConfig,
-                              GroupStream, PallasBackend, ProtocolBackend,
-                              RunReport, SenderPattern, SpindleFlags,
-                              StreamView, SubgroupHandle, SubgroupSpec,
-                              get_backend, register_backend, single_group)
+from repro.core.group import (BACKENDS, TRACE_MAXLEN, Delivery, DeliveryLog,
+                              DESBackend, EpochCarry, GraphBackend, Group,
+                              GroupConfig, GroupStream, PallasBackend,
+                              ProtocolBackend, RunReport, SenderPattern,
+                              SpindleFlags, StreamView, SubgroupHandle,
+                              SubgroupSpec, get_backend, register_backend,
+                              single_group, trace_reset, trace_snapshot)
 from repro.core.views import MembershipService, View
 
 # The serve-plane fan-out (repro.serve.fanout.ReplicatedEngine) is NOT
 # re-exported here: it pulls in the model zoo, and repro.api stays a
 # protocol-plane import.  ``from repro.serve.fanout import
 # ReplicatedEngine`` is the serving entry point (DESIGN.md Sec. 6).
+# The workload plane (repro.load) is protocol-plane and imported as
+# ``from repro.load import ...`` (DESIGN.md Sec. 10).
 
 __all__ = [
     "BACKENDS", "BoundDomain", "DESBackend", "Delivery", "DeliveryLog",
@@ -49,6 +52,7 @@ __all__ = [
     "HOST_X86", "MembershipService", "PallasBackend", "ProtocolBackend",
     "QoS", "RDMA_CX6", "RunReport", "SenderPattern", "SpindleFlags",
     "StreamView", "SubgroupHandle", "SubgroupSpec", "TPU_ICI", "Topic",
-    "View", "get_backend", "many_topic_domain", "register_backend",
-    "single_group", "single_topic_domain",
+    "TRACE_MAXLEN", "View", "get_backend", "many_topic_domain",
+    "register_backend", "single_group", "single_topic_domain",
+    "trace_reset", "trace_snapshot",
 ]

@@ -218,6 +218,30 @@ class BoundDomain:
             ready[gid, :n_pub] = counts
         return self.stream.step(ready)
 
+    def push_matrix(self, ready):
+        """One streamed round from a raw ``(G, S_max)`` ready matrix —
+        the workload plane's per-round push path (DESIGN.md Sec. 10):
+        an open-loop harness that already holds the whole domain's
+        arrival matrix skips the per-topic dict round-trip and dispatches
+        it directly.  Rows are topic-indexed in declaration order
+        (``gid_of``); padded publisher lanes must be zero (the stream
+        validates)."""
+        return self.stream.step(ready)
+
+    def gid_of(self, name: str) -> int:
+        """Subgroup row of topic ``name`` in the stream's (G, S_max)
+        matrices (declaration order)."""
+        return self._gid[name]
+
+    def topic_backlogs(self, view=None) -> Dict[str, np.ndarray]:
+        """Per-topic window-throttled backlog, keyed by topic name:
+        the SMC backpressure signal an admission policy gates on
+        (DESIGN.md Sec. 10).  ``view`` defaults to the stream's current
+        watermarks."""
+        v = self.stream.view() if view is None else view
+        return {t.name: v.backlog[g, : len(t.publishers)].copy()
+                for g, t in enumerate(self.domain.topics)}
+
     def finish(self, settle_max=None):
         """Drain to quiescence; returns ``(RunReport, {topic_name:
         DeliveryLog})``."""

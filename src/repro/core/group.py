@@ -39,11 +39,12 @@ Reconfiguration across view changes is driven by
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
-from typing import (Any, Callable, Dict, List, Mapping, Optional, Protocol,
-                    Tuple)
+from typing import (Any, Callable, Deque, Dict, List, Mapping, Optional,
+                    Protocol, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -718,7 +719,33 @@ class DESBackend:
 # appends exactly ONE entry, and the view-change soaks that a
 # shape-preserving reconfigure appends NONE (the per-subgroup sizes are
 # traced validity masks, not part of the key).
-TRACE_EVENTS: List[Tuple[Tuple[int, ...], Tuple[int, ...], str]] = []
+#
+# Bounded: a long-lived open-loop process (the workload plane drives
+# streams for hours — DESIGN.md Sec. 10) would otherwise grow this list
+# by one entry per distinct compile forever.  The cap is far above any
+# real session's distinct-shape count, so the delta assertions above are
+# unaffected; use :func:`trace_snapshot` / :func:`trace_reset` (also
+# re-exported from :mod:`repro.api`) rather than touching the deque.
+TRACE_MAXLEN = 4096
+TRACE_EVENTS: Deque[Tuple[Tuple[int, ...], Tuple[int, ...], str]] = \
+    collections.deque(maxlen=TRACE_MAXLEN)
+
+
+def trace_snapshot() -> Tuple[Tuple[Tuple[int, ...], Tuple[int, ...], str],
+                              ...]:
+    """Immutable copy of the compile-trace history (newest last).  The
+    supported way to measure "how many programs did this sweep trace":
+    take a snapshot before, subtract its length after."""
+    return tuple(TRACE_EVENTS)
+
+
+def trace_reset() -> int:
+    """Clear the compile-trace history; returns how many entries were
+    dropped.  Does NOT evict compiled programs — a cleared history only
+    forgets that past traces happened."""
+    n = len(TRACE_EVENTS)
+    TRACE_EVENTS.clear()
+    return n
 
 
 def _lower_schedule(counts: np.ndarray, rounds: int) -> np.ndarray:
@@ -772,6 +799,20 @@ def _fold_cost(app_pub, cost):
     round_w = cost[4].astype(jnp.int32) + cost[5].astype(jnp.int32) * \
         jnp.sum((app_pub > 0).astype(jnp.int32), axis=1)       # (T,)
     return round_t, round_w
+
+
+def fold_cost_np(app_pub: np.ndarray, cost: np.ndarray) -> np.ndarray:
+    """Host-side mirror of :func:`_fold_cost`'s time term over one
+    subgroup's (T, S) publish trace -> (T,) per-round microseconds.
+    Kept adjacent to the in-graph fold so the two cannot drift; the
+    workload plane's latency accountant (DESIGN.md Sec. 10) uses it to
+    convert round-granular latencies into the calibrated cost model's
+    time units without re-entering jax."""
+    app_pub = np.asarray(app_pub)
+    kmax = app_pub.max(axis=1) if app_pub.size else \
+        np.zeros(app_pub.shape[0])
+    busiest = np.where(kmax > 0, cost[1] + cost[2] * kmax, 0.0)
+    return cost[0] + busiest + cost[3]
 
 
 def _kernel_receive(ring_window: int):
@@ -1407,6 +1448,43 @@ class GroupStream:
     def shape(self) -> Tuple[int, int]:
         """(G, S_max) — what :meth:`step` expects."""
         return len(self._n), self.s_max
+
+    @property
+    def n_members(self) -> Tuple[int, ...]:
+        """Per-subgroup real member counts (lanes beyond are padding)."""
+        return self._n
+
+    @property
+    def n_senders(self) -> Tuple[int, ...]:
+        """Per-subgroup real sender counts (lanes beyond are padding)."""
+        return self._s
+
+    @property
+    def windows(self) -> Tuple[int, ...]:
+        """Per-subgroup SMC window (the backpressure bound an admission
+        policy throttles against — DESIGN.md Sec. 10)."""
+        return self._w
+
+    @property
+    def cost_params(self) -> np.ndarray:
+        """(G, 6) cost-model coefficients (see :func:`_cost_params`),
+        consumable by :func:`fold_cost_np` for host-side time folds."""
+        return self._costs.copy()
+
+    def traces(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The accumulated round traces, stacked: ``(batches (G, T, N),
+        app_pub (G, T, S), nulls (G, T, S))`` for the T rounds streamed
+        so far.  This is the raw material of per-message latency
+        reconstruction (delivery watermark per round x per-sender publish
+        trace — DESIGN.md Sec. 10); empty T=0 arrays before any step."""
+        g, s = self.shape
+        if not self.rounds:
+            z = np.zeros((g, 0, self.n_max), np.int64)
+            return z, np.zeros((g, 0, s), np.int64), \
+                np.zeros((g, 0, s), np.int64)
+        return (np.stack(self._batches, axis=1),
+                np.stack(self._app_pub, axis=1),
+                np.stack(self._nulls, axis=1))
 
     def step(self, ready) -> StreamView:
         """One protocol round: ``ready[g, s]`` app messages become ready

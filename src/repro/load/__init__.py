@@ -1,0 +1,35 @@
+"""repro.load — the workload plane (DESIGN.md Sec. 10).
+
+Open-loop traffic for the protocol, DDS, and serve planes: seeded
+arrival generators (:mod:`~repro.load.arrivals`), staged ramp profiles
+(:mod:`~repro.load.profiles`), admission/shed policies lowering to SMC
+window backpressure (:mod:`~repro.load.admission`), per-message
+tail-latency accounting from round traces (:mod:`~repro.load.metrics`),
+and the harness tying them together (:mod:`~repro.load.harness`)::
+
+    from repro.load import Poisson, WindowSlack, staged_ramp, run_profile
+
+    profile = staged_ramp(Poisson(rate=0.5), overload=5.0, seed=0)
+    report = run_profile(api.Group(cfg), profile,
+                         admission=WindowSlack(queue_cap=32))
+    report.stage("overload").p99_rounds   # bounded by the policy
+"""
+
+from repro.load.admission import (AdmissionPolicy, AdmitAll,
+                                  ServeAdmission, TokenBucket,
+                                  WindowSlack)
+from repro.load.arrivals import (ArrivalSpec, Diurnal, OnOff, Poisson,
+                                 Trace)
+from repro.load.harness import run_profile
+from repro.load.metrics import (LoadReport, StageStats, StageTally,
+                                build_report, delivered_watermark,
+                                sender_app_timeline)
+from repro.load.profiles import Profile, Stage, staged_ramp
+
+__all__ = [
+    "AdmissionPolicy", "AdmitAll", "ArrivalSpec", "Diurnal",
+    "LoadReport", "OnOff", "Poisson", "Profile", "ServeAdmission",
+    "Stage", "StageStats", "StageTally", "TokenBucket", "Trace",
+    "WindowSlack", "build_report", "delivered_watermark", "run_profile",
+    "sender_app_timeline", "staged_ramp",
+]

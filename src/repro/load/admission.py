@@ -1,0 +1,141 @@
+"""Admission control and shed/stall policies (DESIGN.md Sec. 10).
+
+The seam between open-loop arrivals and the protocol's finite resources.
+Arrivals land in per-sender FIFO queues held by the harness; every round
+the policy decides, per ``(subgroup, sender)`` lane, how many queued
+messages to RELEASE into the stream's ready counts and how many to SHED
+from the queue tail.  Whatever the policy releases beyond the SMC window
+the protocol itself throttles into the stream backlog — that backlog is
+the backpressure signal the policies gate on, so admission "lowers to"
+the SMC window rather than duplicating it.
+
+The honesty constraint: under overload something must give.  A policy
+that never sheds (``AdmitAll``) lets queues and latency grow without
+bound — useful as the uncontrolled baseline, and exactly what an honest
+report must show as unbounded.  A bounding policy (``WindowSlack``,
+``TokenBucket``) keeps p99 and queue depth finite by refusing work,
+and the shed count is reported separately from goodput — the harness
+never silently converges to closed-loop behavior.
+
+The serve plane has its own resource model (request queues and KV
+slots); :class:`ServeAdmission` is the equivalent policy there, lowered
+by :meth:`repro.serve.fanout.ReplicatedEngine.run` to queue-tail sheds
+and watermark-aware ``stalled`` slots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+class AdmissionPolicy:
+    """Per-round admission decision over the ``(G, S)`` lane grid.
+
+    ``admit(round_no, queued, backlog, windows)`` receives the post-
+    arrival queue depths, the stream's window-throttled backlog from the
+    previous round's watermarks, and the per-subgroup SMC windows; it
+    returns ``(release, shed)`` counts with ``release + shed <= queued``
+    lane-wise.  Implementations may keep state (token buckets); the
+    harness calls them once per round in round order."""
+
+    def admit(self, round_no: int, queued: np.ndarray,
+              backlog: np.ndarray, windows: np.ndarray
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+
+def _clip_decision(release, shed, queued):
+    release = np.minimum(np.maximum(release, 0), queued)
+    shed = np.minimum(np.maximum(shed, 0), queued - release)
+    return release.astype(np.int64), shed.astype(np.int64)
+
+
+@dataclasses.dataclass
+class AdmitAll(AdmissionPolicy):
+    """The uncontrolled baseline: release everything, shed nothing.
+    Under overload the stream backlog (and hence latency) grows without
+    bound — the behavior an honest saturation report must expose, not
+    hide."""
+
+    def admit(self, round_no, queued, backlog, windows):
+        return queued.astype(np.int64), np.zeros_like(queued, np.int64)
+
+
+@dataclasses.dataclass
+class WindowSlack(AdmissionPolicy):
+    """Backpressure-coupled admission: release only while the stream's
+    window-throttled backlog has slack, shed the queue tail beyond a cap.
+
+    Per lane, release ``max(0, inflight_limit - backlog)`` (default
+    limit: 2x the subgroup's SMC window — one window in flight, one
+    queued behind it), then drop whatever still exceeds ``queue_cap``
+    from the TAIL (newest arrivals — the ones that would wait longest).
+    Both latency and queue depth are thereby bounded: a released message
+    waits at most ``queue_cap`` harness rounds' worth of drain plus
+    ``inflight_limit`` in-stream messages, regardless of offered load."""
+
+    inflight_limit: Optional[int] = None
+    queue_cap: Optional[int] = 64
+
+    def admit(self, round_no, queued, backlog, windows):
+        if self.inflight_limit is not None:
+            limit = np.full_like(queued, self.inflight_limit)
+        else:
+            limit = np.broadcast_to(2 * np.asarray(windows)[:, None],
+                                    queued.shape)
+        release = np.minimum(queued, np.maximum(limit - backlog, 0))
+        if self.queue_cap is None:
+            shed = np.zeros_like(queued)
+        else:
+            shed = np.maximum(queued - release - self.queue_cap, 0)
+        return _clip_decision(release, shed, queued)
+
+
+@dataclasses.dataclass
+class TokenBucket(AdmissionPolicy):
+    """Classic rate limiter: each lane accrues ``rate`` tokens per round
+    up to ``burst``; a release spends one token per message.  Optionally
+    tail-drops beyond ``queue_cap`` like :class:`WindowSlack`.  Bounds
+    the RELEASED rate (so the stream never saturates if ``rate`` is set
+    below capacity) rather than reacting to backlog."""
+
+    rate: float = 1.0
+    burst: float = 8.0
+    queue_cap: Optional[int] = 64
+    _tokens: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)
+
+    def admit(self, round_no, queued, backlog, windows):
+        if self._tokens is None:
+            self._tokens = np.full(queued.shape, float(self.burst))
+        self._tokens = np.minimum(self._tokens + self.rate, self.burst)
+        release = np.minimum(queued, np.floor(self._tokens).astype(
+            np.int64))
+        self._tokens = self._tokens - release
+        if self.queue_cap is None:
+            shed = np.zeros_like(queued)
+        else:
+            shed = np.maximum(queued - release - self.queue_cap, 0)
+        return _clip_decision(release, shed, queued)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeAdmission:
+    """Admission/shed/stall policy for the serve plane, lowered by
+    :meth:`repro.serve.fanout.ReplicatedEngine.run`:
+
+    * ``queue_cap`` — per-replica request-queue cap; arrivals beyond it
+      are shed from the queue tail (newest first) and recorded with
+      their round, bounding both queue depth and admitted-request wait.
+    * ``stall_backlog`` — watermark-aware stall: a KV slot whose
+      multicast lane has more than this many messages in flight
+      (published-but-undelivered plus window-throttled backlog) decodes
+      a null round until the watermark catches up — backpressure
+      expressed through the slot's SMC window instead of unbounded ring
+      occupancy."""
+
+    queue_cap: Optional[int] = None
+    stall_backlog: Optional[int] = None

@@ -1,0 +1,266 @@
+"""The open-loop load harness: run a profile against a target, get a
+:class:`~repro.load.metrics.LoadReport` (DESIGN.md Sec. 10).
+
+Targets, in ascending stack depth:
+
+* a bare :class:`~repro.core.group.Group` / ``GroupStream`` — the
+  protocol plane alone;
+* a :class:`~repro.core.dds.BoundDomain` — the same stream behind the
+  topic-keyed DDS front (arrival lanes are topic publishers);
+* a :class:`~repro.serve.fanout.ReplicatedEngine` — the serve plane
+  (arrivals become requests; latency is submit -> finish in engine
+  rounds).
+
+The stream path is the reference loop: per round, arrivals land in
+per-lane FIFO queues; the admission policy releases/sheds against the
+previous round's SMC backlog watermark; the released counts become the
+round's ``step(ready)``; after the last stage the admission queue keeps
+releasing (no new arrivals) until it empties, then the stream drains
+(:meth:`finish`) and per-message latencies are reconstructed from the
+round traces (:mod:`repro.load.metrics`).  Everything is deterministic
+given (profile, target, policy): graph and pallas produce bit-identical
+reports, and the loadtest benchmark gates on that.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import dds as dds_mod
+from repro.core import group as group_mod
+from repro.load.admission import (AdmissionPolicy, AdmitAll,
+                                  ServeAdmission)
+from repro.load.metrics import (LoadReport, StageStats, StageTally,
+                                build_report)
+from repro.load.profiles import Profile
+
+
+def _resolve_stream(target, backend: str):
+    if isinstance(target, group_mod.Group):
+        return target.stream(backend=backend)
+    if isinstance(target, group_mod.GroupStream):
+        return target
+    if isinstance(target, dds_mod.BoundDomain):
+        return target.stream
+    raise TypeError(
+        f"cannot load-test {type(target).__name__}; pass a Group, "
+        "GroupStream, BoundDomain, or ReplicatedEngine")
+
+
+def run_profile(target, profile: Profile,
+                admission: Optional[AdmissionPolicy] = None, *,
+                backend: str = "graph",
+                settle_max: Optional[int] = None,
+                max_new_tokens: int = 4,
+                prompt_len: int = 2) -> LoadReport:
+    """Drive ``target`` open-loop through ``profile`` and account the
+    result.  ``admission`` defaults to :class:`AdmitAll` (the
+    uncontrolled baseline) on stream targets and must be a
+    :class:`ServeAdmission` (or None) on a ``ReplicatedEngine``.
+    ``backend`` picks the stream substrate when ``target`` is a bare
+    ``Group``; ``settle_max`` caps the post-profile drain (capped-off
+    messages report as ``undelivered``).  ``max_new_tokens`` /
+    ``prompt_len`` shape the synthetic requests on the serve path."""
+    if hasattr(target, "engines") and hasattr(target, "submit"):
+        return _run_serve_profile(target, profile, admission,
+                                  settle_max=settle_max,
+                                  max_new_tokens=max_new_tokens,
+                                  prompt_len=prompt_len)
+    stream = _resolve_stream(target, backend)
+    if stream.rounds or stream.carry is not None:
+        raise ValueError(
+            "load profiles need a fresh stream: rounds already streamed "
+            "or an epoch carry would misalign the FIFO latency "
+            "accounting")
+    policy = admission if admission is not None else AdmitAll()
+    if isinstance(policy, ServeAdmission):
+        raise TypeError("ServeAdmission lowers to the serve plane; "
+                        "stream targets take an AdmissionPolicy")
+    g_n, s_max = stream.shape
+    mask = np.zeros((g_n, s_max), bool)
+    for g, s_g in enumerate(stream.n_senders):
+        mask[g, :s_g] = True
+    windows = np.asarray(stream.windows, np.int64)
+    stage_mats = profile.matrices((g_n, s_max), mask)
+    pending: List[List[collections.deque]] = [
+        [collections.deque() for _ in range(s_max)] for _ in range(g_n)]
+    rel_rounds: List[List[List[int]]] = [
+        [[] for _ in range(s_max)] for _ in range(g_n)]
+    rel_stages: List[List[List[int]]] = [
+        [[] for _ in range(s_max)] for _ in range(g_n)]
+    tallies: List[StageTally] = [
+        StageTally(name=st.name, rounds=st.rounds, scale=st.scale)
+        for st in profile.stages]
+    view = None
+    t_global = 0
+
+    def admit_round(tally: StageTally):
+        nonlocal view, t_global
+        queued = np.array([[len(pending[g][s]) for s in range(s_max)]
+                           for g in range(g_n)], np.int64)
+        backlog = (np.where(mask, view.backlog, 0).astype(np.int64)
+                   if view is not None
+                   else np.zeros((g_n, s_max), np.int64))
+        release, shed = policy.admit(t_global, queued, backlog, windows)
+        release = np.minimum(np.maximum(release, 0), queued)
+        shed = np.minimum(np.maximum(shed, 0), queued - release)
+        # released/shed counts go to the message's ARRIVAL stage, same
+        # attribution as the delivered/latency stats built from traces
+        for g, s in zip(*np.nonzero(release)):
+            for _ in range(int(release[g, s])):
+                a_rnd, a_stage = pending[g][s].popleft()
+                rel_rounds[g][s].append(a_rnd)
+                rel_stages[g][s].append(a_stage)
+                tallies[a_stage].released += 1
+        for g, s in zip(*np.nonzero(shed)):
+            for _ in range(int(shed[g, s])):
+                _, a_stage = pending[g][s].pop()  # tail drop: newest
+                tallies[a_stage].shed += 1
+        view = stream.step(release.astype(np.int32))
+        depth = int(queued.sum() - release.sum() - shed.sum())
+        tally.max_queue_depth = max(tally.max_queue_depth, depth)
+        bl = int(np.where(mask, view.backlog, 0).sum())
+        tally.max_stream_backlog = max(tally.max_stream_backlog, bl)
+        t_global += 1
+        return int(release.sum() + shed.sum())
+
+    for si, (stage, mat) in enumerate(zip(profile.stages, stage_mats)):
+        tally = tallies[si]
+        for t in range(stage.rounds):
+            arr = mat[t]
+            tally.offered += int(arr.sum())
+            for g, s in zip(*np.nonzero(arr)):
+                pending[g][s].extend([(t_global, si)] * int(arr[g, s]))
+            admit_round(tally)
+        tally.end_queue_depth = int(
+            sum(len(q) for row in pending for q in row))
+    # drain the admission queue: arrivals stopped, but admitted-but-queued
+    # work keeps releasing under the same policy until the lanes empty (or
+    # the policy stalls for 64 straight rounds — leftovers then report as
+    # end_queue_depth).  Without this, overload goodput misreports the
+    # plateau as collapse purely from stranded-queue accounting
+    # (DESIGN.md Sec. 10).
+    idle = 0
+    while (idle < 64
+           and any(q for row in pending for q in row)):
+        progressed = admit_round(tallies[-1])
+        idle = 0 if progressed else idle + 1
+    tallies[-1].end_queue_depth = int(
+        sum(len(q) for row in pending for q in row))
+    run_report, _logs = stream.finish(settle_max=settle_max)
+    batches, app_pub, nulls = stream.traces()
+    released = [[(np.asarray(rel_rounds[g][s], np.int64),
+                  np.asarray(rel_stages[g][s], np.int64))
+                 for s in range(s_max)] for g in range(g_n)]
+    return build_report(batches=batches, app_pub=app_pub, nulls=nulls,
+                        costs=stream.cost_params,
+                        n_members=stream.n_members,
+                        n_senders=stream.n_senders,
+                        released=released, tallies=tallies,
+                        run_report=run_report)
+
+
+def _run_serve_profile(rep, profile: Profile,
+                       admission: Optional[ServeAdmission], *,
+                       settle_max: Optional[int],
+                       max_new_tokens: int, prompt_len: int
+                       ) -> LoadReport:
+    """The serve-plane lowering: arrival lanes are KV slots, per-round
+    lane sums become request arrivals per replica; latency is request
+    submit -> finish in engine rounds (the decode loop has no
+    cost-model microseconds — the us percentiles report 0)."""
+    from repro.serve.engine import Request
+
+    if admission is not None and not isinstance(admission,
+                                                ServeAdmission):
+        raise TypeError("ReplicatedEngine targets take a ServeAdmission "
+                        f"policy, got {type(admission).__name__}")
+    g_n = len(rep.engines)
+    slots = [eng.ecfg.max_batch for eng in rep.engines]
+    s_max = max(slots)
+    mask = np.zeros((g_n, s_max), bool)
+    for g, b in enumerate(slots):
+        mask[g, :b] = True
+    stage_mats = profile.matrices((g_n, s_max), mask)
+    counts = np.concatenate(stage_mats, axis=0).sum(axis=2)  # (T, G)
+    total_rounds = counts.shape[0]
+    prompt_rng = np.random.default_rng(profile.seed + 1)
+    vocab = min(eng.cfg.vocab_size for eng in rep.engines)
+    schedule: List[List[List[Request]]] = [
+        [[] for _ in range(g_n)] for _ in range(total_rounds)]
+    rid = 0
+    for t in range(total_rounds):
+        for g in range(g_n):
+            for _ in range(int(counts[t, g])):
+                prompt = prompt_rng.integers(
+                    1, max(vocab - 1, 2), size=prompt_len).astype(
+                        np.int32)
+                schedule[t][g].append(Request(
+                    rid=rid, prompt=prompt,
+                    max_new_tokens=max_new_tokens))
+                rid += 1
+    run_report = rep.run(
+        arrive_fn=lambda g, rnd: schedule[rnd][g],
+        arrive_rounds=total_rounds, admission=admission,
+        settle_max=settle_max,
+        max_rounds=total_rounds + 10_000)
+    bounds = profile.stage_bounds()
+
+    def stage_of(rnd: int) -> int:
+        for si, (lo, hi) in enumerate(bounds):
+            if lo <= rnd < hi:
+                return si
+        return len(bounds) - 1
+    shed_rids = {r for r, _ in rep.shed_log}
+    lat: List[List[float]] = [[] for _ in profile.stages]
+    n = len(profile.stages)
+    offered = np.zeros(n, np.int64)
+    shed = np.zeros(n, np.int64)
+    delivered = np.zeros(n, np.int64)
+    for r, rnd in rep.submit_rounds.items():
+        si = stage_of(rnd)
+        offered[si] += 1
+        if r in shed_rids:
+            shed[si] += 1
+        elif r in rep.finish_round_by_rid:
+            delivered[si] += 1
+            lat[si].append(rep.finish_round_by_rid[r] - rnd + 1)
+    stages = []
+    for si, stage in enumerate(profile.stages):
+        lo, hi = bounds[si]
+        depths = rep.queue_depth_log[lo:hi]
+        backlogs = rep.backlog_log[lo:hi]
+        if si == n - 1:                 # drain rounds land on the tail
+            depths = rep.queue_depth_log[lo:]
+            backlogs = rep.backlog_log[lo:]
+        lr = np.asarray(lat[si], np.float64)
+        stages.append(StageStats(
+            name=stage.name, rounds=stage.rounds, scale=stage.scale,
+            offered=int(offered[si]),
+            released=int(offered[si] - shed[si]),
+            shed=int(shed[si]), delivered=int(delivered[si]),
+            undelivered=int(offered[si] - shed[si] - delivered[si]),
+            p50_rounds=float(np.percentile(lr, 50)) if lr.size else 0.0,
+            p99_rounds=float(np.percentile(lr, 99)) if lr.size else 0.0,
+            p999_rounds=float(np.percentile(lr, 99.9)) if lr.size
+            else 0.0,
+            mean_rounds=float(lr.mean()) if lr.size else 0.0,
+            p50_us=0.0, p99_us=0.0, p999_us=0.0,
+            offered_per_round=float(offered[si]) / stage.rounds,
+            goodput_per_round=float(delivered[si]) / stage.rounds,
+            max_queue_depth=max(depths, default=0),
+            max_stream_backlog=max(backlogs, default=0),
+            end_queue_depth=0))
+    totals = {
+        "offered": int(offered.sum()), "shed": int(shed.sum()),
+        "released": int(offered.sum() - shed.sum()),
+        "delivered": int(delivered.sum()),
+        "undelivered": int(offered.sum() - shed.sum()
+                           - delivered.sum()),
+        "rounds": int(total_rounds),
+    }
+    return LoadReport(stages=stages, totals=totals,
+                      run_report=run_report)

@@ -68,6 +68,7 @@ class EngineRound:
     admitted_rids: List[int] = dataclasses.field(default_factory=list)
     emitted: List[int] = dataclasses.field(default_factory=list)   # slots
     finished: List[int] = dataclasses.field(default_factory=list)  # slots
+    finished_rids: List[int] = dataclasses.field(default_factory=list)
     stalled: List[int] = dataclasses.field(default_factory=list)   # slots
 
     def __bool__(self) -> bool:          # truthy = the round made progress
@@ -194,6 +195,7 @@ class ServeEngine:
                 self.slot_req[i] = None    # slot delivered -> reusable
                 self.slot_len[i] = 0
                 info.finished.append(i)
+                info.finished_rids.append(req.rid)
         return info
 
     def drained(self) -> bool:

@@ -43,10 +43,15 @@ import numpy as np
 from repro.core import dds
 from repro.core import views as views_mod
 from repro.core.group import RunReport
-from repro.serve.engine import ServeEngine
+from repro.load.admission import ServeAdmission
+from repro.serve.engine import Request, ServeEngine
 
 # stall_fn(replica, engine_round) -> slots whose client is backpressured
 StallFn = Callable[[int, int], Sequence[int]]
+
+# arrive_fn(replica, engine_round) -> requests arriving open-loop that
+# round (the workload plane's injection point — DESIGN.md Sec. 10)
+ArriveFn = Callable[[int, int], Sequence[Request]]
 
 
 @dataclasses.dataclass
@@ -106,6 +111,13 @@ class ReplicatedEngine:
         self.finish_rounds: List[Tuple[int, int, int]] = []  # (g, s, rnd)
         self.free_rounds: List[Tuple[int, int, int]] = []    # (g, s, rnd)
         self.stall_rounds = 0
+        # open-loop traces (the workload plane reads these)
+        self.submit_rounds: Dict[int, int] = {}      # rid -> arrival rnd
+        self.finish_round_by_rid: Dict[int, int] = {}
+        self.shed_log: List[Tuple[int, int]] = []    # (rid, round shed)
+        self.queue_depth_log: List[int] = []         # total queued / rnd
+        self.backlog_log: List[int] = []             # stream backlog / rnd
+        self._last_view = None
         self.last_report: Optional[RunReport] = None
         # mid-run view changes (fail_at): one entry per installed view —
         # (engine round, View, closing-epoch report, {topic: cut log})
@@ -124,6 +136,12 @@ class ReplicatedEngine:
         self.finish_rounds = []
         self.free_rounds = []
         self.stall_rounds = 0
+        self.submit_rounds = {}
+        self.finish_round_by_rid = {}
+        self.shed_log = []
+        self.queue_depth_log = []
+        self.backlog_log = []
+        self._last_view = None
         self.view_log = []
         self._failed: set = set()
 
@@ -179,6 +197,7 @@ class ReplicatedEngine:
                     del self._holds[g][slot]
                     self.free_rounds.append((g, slot, round_no))
         self.view_log.append((round_no, view, old_report, old_logs))
+        self._last_view = None       # old-epoch watermarks are void
         return new_bound
 
     # -- the fused serve+multicast loop --------------------------------------
@@ -188,7 +207,10 @@ class ReplicatedEngine:
 
     def run(self, *, max_rounds: int = 10_000,
             settle_max: Optional[int] = None,
-            fail_at: Optional[Mapping[int, Sequence[int]]] = None
+            fail_at: Optional[Mapping[int, Sequence[int]]] = None,
+            arrive_fn: Optional[ArriveFn] = None,
+            arrive_rounds: int = 0,
+            admission: Optional[ServeAdmission] = None
             ) -> RunReport:
         """Drive every replica to drain, one multicast round per engine
         round, then settle the multicast and return the merged report.
@@ -199,6 +221,23 @@ class ReplicatedEngine:
         into a freed slot is gated on the delivery watermark; requests
         queue behind held slots rather than overwrite undelivered ring
         state.
+
+        Open-loop driving (DESIGN.md Sec. 10): ``arrive_fn(g, round)``
+        injects that round's arriving requests into replica ``g``'s
+        queue for the first ``arrive_rounds`` rounds — the loop keeps
+        stepping through momentary drains while arrivals are still due,
+        so traffic does not politely wait for the engines.  ``admission``
+        (a :class:`repro.load.admission.ServeAdmission`) bounds the
+        response to overload: queue tails beyond ``queue_cap`` are SHED
+        (recorded in :attr:`shed_log` with their round), and a slot
+        whose multicast lane has more than ``stall_backlog`` messages in
+        flight (published-but-undelivered + window-throttled backlog,
+        read off the previous round's watermarks) decodes a null round —
+        the watermark-aware stall that expresses backpressure through
+        the slot's SMC window.  Arrival, shed, and finish rounds land in
+        :attr:`submit_rounds` / :attr:`shed_log` /
+        :attr:`finish_round_by_rid`; per-round totals in
+        :attr:`queue_depth_log` / :attr:`backlog_log`.
 
         ``fail_at`` maps an engine round to SUBSCRIBER node ids that
         fail after that round's multicast dispatch: the serve plane then
@@ -234,14 +273,37 @@ class ReplicatedEngine:
         steps0 = sum(eng.decode_steps for eng in self.engines)
         round_no = 0
         while (round_no < max_rounds
-               and not all(eng.drained() for eng in self.engines)):
+               and (round_no < arrive_rounds
+                    or not all(eng.drained() for eng in self.engines))):
+            if arrive_fn is not None and round_no < arrive_rounds:
+                for g in range(len(self.engines)):
+                    for req in arrive_fn(g, round_no) or ():
+                        self.submit(g, req)
+                        self.submit_rounds[req.rid] = round_no
+            if admission is not None and admission.queue_cap is not None:
+                for eng in self.engines:
+                    while len(eng.queue) > admission.queue_cap:
+                        dropped = eng.queue.pop()   # shed the tail
+                        self.shed_log.append((dropped.rid, round_no))
+            self.queue_depth_log.append(
+                sum(len(eng.queue) for eng in self.engines))
             counts_by_topic = {}
             for g, eng in enumerate(self.engines):
-                stalled = tuple(self.stall_fn(g, round_no)) \
-                    if self.stall_fn else ()
+                stalled = set(self.stall_fn(g, round_no)) \
+                    if self.stall_fn else set()
+                if (admission is not None
+                        and admission.stall_backlog is not None
+                        and self._last_view is not None):
+                    v, b = self._last_view, self._slots[g]
+                    inflight = (v.published[g, :b]
+                                - v.sender_delivered(g)[:b]
+                                + v.backlog[g, :b])
+                    stalled |= {int(s) for s in np.nonzero(
+                        inflight > admission.stall_backlog)[0]}
                 held = self._holds[g]
                 mask = [s not in held for s in range(self._slots[g])]
-                info = eng.step(stalled=stalled, admit_mask=mask)
+                info = eng.step(stalled=tuple(sorted(stalled)),
+                                admit_mask=mask)
                 self.stall_rounds += len(info.stalled)
                 c = np.zeros(self._slots[g], np.int64)
                 for slot, rid in zip(info.admitted, info.admitted_rids):
@@ -256,8 +318,14 @@ class ReplicatedEngine:
                         target_apps=int(self._apps_enqueued[g][slot]),
                         finished_round=round_no)
                     self.finish_rounds.append((g, slot, round_no))
+                for rid in info.finished_rids:
+                    self.finish_round_by_rid[rid] = round_no
                 counts_by_topic[self.topics[g].name] = c
             view = bound.push_round(counts_by_topic)
+            self._last_view = view
+            self.backlog_log.append(int(sum(
+                int(view.backlog[g, :self._slots[g]].sum())
+                for g in range(len(self.engines)))))
             self._sync_holds(bound.stream, view, round_no)
             if round_no in fail_at:
                 bound = self._fail_subscribers(bound, fail_at[round_no],
@@ -293,6 +361,9 @@ class ReplicatedEngine:
             "stall_rounds": self.stall_rounds,
             "held_slots": sum(len(h) for h in self._holds),
             "view_changes": len(self.view_log),
+            "shed_requests": len(self.shed_log),
+            "max_queue_depth": max(self.queue_depth_log, default=0),
+            "max_backlog": max(self.backlog_log, default=0),
             "wall_s": wall,
         }
         self.last_report = report

@@ -6,19 +6,16 @@ These check the paper's stated invariants:
     (Sec. 3.3's proof, checked mechanically),
   * monotone merge safety (Sec. 3.4's lock-release argument),
   * the fused sweep delivers the same total order at every node.
+
+Property tests draw cases from seeded numpy generators (one fixed seed
+per parametrized case) instead of hypothesis — the container doesn't
+ship it, and the suite's skip budget is ~0 (tests/conftest.py).
 """
 
-import pytest
-
-pytest.importorskip("hypothesis")  # extras: skip, not a collection error
-
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core import nullsend, smc, sst, sweep
 
@@ -26,16 +23,23 @@ pytestmark = pytest.mark.fast
 
 jax.config.update("jax_platform_name", "cpu")
 
+_BASE_SEED = 20_000
+
+
+def _rng(case: int) -> np.random.Generator:
+    return np.random.default_rng(_BASE_SEED + case)
+
 
 # ---------------------------------------------------------------------------
 # sst: round-robin arithmetic
 # ---------------------------------------------------------------------------
 
-@given(st.lists(st.integers(0, 200), min_size=1, max_size=16))
-def test_rr_prefix_definition(counts):
+@pytest.mark.parametrize("case", range(30))
+def test_rr_prefix_definition(case):
     """rr_prefix(counts) = largest N s.t. every message of the first N in
     round-robin order is present — checked against brute force."""
-    counts = np.array(counts)
+    rng = _rng(case)
+    counts = rng.integers(0, 201, size=int(rng.integers(1, 17)))
     s = len(counts)
     n = 0
     while counts[n % s] >= n // s + 1:
@@ -43,17 +47,21 @@ def test_rr_prefix_definition(counts):
     assert sst.rr_prefix(counts) == n
 
 
-@given(st.integers(0, 10_000), st.integers(1, 16))
-def test_sender_counts_roundtrip(prefix, s):
+@pytest.mark.parametrize("case", range(30))
+def test_sender_counts_roundtrip(case):
+    rng = _rng(case)
+    prefix = int(rng.integers(0, 10_001))
+    s = int(rng.integers(1, 17))
     counts = sst.sender_counts(np.array(prefix), s)
     assert counts.sum() == prefix
     # the counts of a complete prefix reproduce the prefix
     assert sst.rr_prefix(counts) >= prefix
 
 
-@given(st.lists(st.integers(0, 50), min_size=1, max_size=12))
-def test_rr_prefix_monotone(counts):
-    counts = np.array(counts)
+@pytest.mark.parametrize("case", range(30))
+def test_rr_prefix_monotone(case):
+    rng = _rng(case)
+    counts = rng.integers(0, 51, size=int(rng.integers(1, 13)))
     bumped = counts + 1
     assert sst.rr_prefix(bumped) >= sst.rr_prefix(counts)
 
@@ -96,16 +104,23 @@ def test_smc_region_bytes_matches_paper_formula():
     assert abs(cfg.region_bytes(16) / 2**20 - 16) < 0.7
 
 
-@given(st.integers(0, 1000), st.integers(1, 64))
-def test_slot_counter_identity(index, window):
+@pytest.mark.parametrize("case", range(30))
+def test_slot_counter_identity(case):
+    rng = _rng(case)
+    index = int(rng.integers(0, 1001))
+    window = int(rng.integers(1, 65))
     # message k lives in slot k % w with counter k // w
     slot = smc.slot_of(index, window)
     ctr = smc.counter_for(index, window)
     assert ctr * window + slot == index
 
 
-@given(st.integers(1, 8), st.integers(0, 40), st.integers(0, 80))
-def test_visible_from_counters(window, received, published):
+@pytest.mark.parametrize("case", range(30))
+def test_visible_from_counters(case):
+    rng = _rng(case)
+    window = int(rng.integers(1, 9))
+    received = int(rng.integers(0, 41))
+    published = int(rng.integers(0, 81))
     published = max(received, min(published, received + window))
     counters = np.full(window, -1, dtype=np.int64)
     for k in range(published):
@@ -118,33 +133,39 @@ def test_visible_from_counters(window, received, published):
 # nullsend: the Sec. 3.3 rule
 # ---------------------------------------------------------------------------
 
-@given(st.integers(0, 7), st.integers(0, 100), st.integers(0, 100),
-       st.integers(0, 7))
-def test_null_target_is_minimal_non_preceding(i, l, k, j):
+@pytest.mark.parametrize("case", range(40))
+def test_null_target_is_minimal_non_preceding(case):
     """target is the smallest own index that does not precede M(j, k)."""
+    rng = _rng(case)
+    i = int(rng.integers(0, 8))
+    k = int(rng.integers(0, 101))
+    j = int(rng.integers(0, 8))
     tgt = int(nullsend.null_target(i, k, j))
     assert not nullsend.precedes(tgt, i, k, j)
     if tgt > 0:
         assert nullsend.precedes(tgt - 1, i, k, j)
-    del l
 
 
-@given(st.integers(2, 8), st.data())
-def test_nulls_needed_never_responds_to_self(s, data):
-    rank = data.draw(st.integers(0, s - 1))
+@pytest.mark.parametrize("case", range(30))
+def test_nulls_needed_never_responds_to_self(case):
+    rng = _rng(case)
+    s = int(rng.integers(2, 9))
+    rank = int(rng.integers(0, s))
     counts = np.zeros(s, dtype=np.int64)
-    counts[rank] = data.draw(st.integers(0, 50))
+    counts[rank] = int(rng.integers(0, 51))
     assert nullsend.nulls_needed(rank, 0, counts) == 0
 
 
-@given(st.integers(2, 8), st.data())
-def test_nulls_needed_covers_delivery(s, data):
+@pytest.mark.parametrize("case", range(40))
+def test_nulls_needed_covers_delivery(case):
     """After sending the prescribed nulls, every message received so far is
     deliverable once others catch up: our next message no longer precedes
     any received message."""
-    rank = data.draw(st.integers(0, s - 1))
-    counts = np.array([data.draw(st.integers(0, 30)) for _ in range(s)])
-    own_next = data.draw(st.integers(0, 30))
+    rng = _rng(case)
+    s = int(rng.integers(2, 9))
+    rank = int(rng.integers(0, s))
+    counts = rng.integers(0, 31, size=s)
+    own_next = int(rng.integers(0, 31))
     n = int(nullsend.nulls_needed(rank, own_next, counts))
     new_next = own_next + n
     for j in range(s):
@@ -186,15 +207,15 @@ def _run(n_members, n_senders, schedule, null_send=True, window=1 << 30):
                             null_send=null_send, window=window)
 
 
-@settings(deadline=None, max_examples=25)
-@given(st.integers(2, 5), st.data())
-def test_sweep_no_stall_with_nulls(n_senders, data):
+@pytest.mark.parametrize("case", range(25))
+def test_sweep_no_stall_with_nulls(case):
     """Correctness (property 3): whatever the sending pattern, with nulls
     every published app message is eventually delivered."""
-    n_members = n_senders + data.draw(st.integers(0, 2))
-    rounds = data.draw(st.integers(5, 25))
-    sched = np.array([[data.draw(st.integers(0, 2))
-                       for _ in range(n_senders)] for _ in range(rounds)])
+    rng = _rng(case)
+    n_senders = int(rng.integers(2, 6))
+    n_members = n_senders + int(rng.integers(0, 3))
+    rounds = int(rng.integers(5, 26))
+    sched = rng.integers(0, 3, size=(rounds, n_senders))
     # settle: enough empty rounds for visibility + nulls to drain
     settle = np.zeros((rounds + 2 * n_members + 6, n_senders), np.int64)
     st_final, _ = _run(n_members, n_senders, np.vstack([sched, settle]))
@@ -204,14 +225,14 @@ def test_sweep_no_stall_with_nulls(n_senders, data):
     assert int(st_final.app_sent.sum()) == sched.sum()
 
 
-@settings(deadline=None, max_examples=25)
-@given(st.integers(2, 5), st.data())
-def test_sweep_quiescence(n_senders, data):
+@pytest.mark.parametrize("case", range(25))
+def test_sweep_quiescence(case):
     """Property 4: once the app stops, nulls stop too."""
+    rng = _rng(case)
+    n_senders = int(rng.integers(2, 6))
     n_members = n_senders
-    rounds = data.draw(st.integers(3, 15))
-    sched = np.array([[data.draw(st.integers(0, 2))
-                       for _ in range(n_senders)] for _ in range(rounds)])
+    rounds = int(rng.integers(3, 16))
+    sched = rng.integers(0, 3, size=(rounds, n_senders))
     settle = np.zeros((rounds + 2 * n_members + 6, n_senders), np.int64)
     st1, _ = _run(n_members, n_senders, np.vstack([sched, settle]))
     before = int(st1.nulls_sent.sum())
@@ -223,14 +244,14 @@ def _run_cont(state, schedule):
     return sweep.run_rounds(state, jnp.asarray(schedule, jnp.int32))
 
 
-@settings(deadline=None, max_examples=20)
-@given(st.integers(2, 5), st.data())
-def test_sweep_one_round_skew(n_senders, data):
+@pytest.mark.parametrize("case", range(20))
+def test_sweep_one_round_skew(case):
     """The proof sketch in Sec 3.3: null-sends keep every sender within one
     round of the most advanced sender (after visibility settles)."""
-    rounds = data.draw(st.integers(3, 12))
-    sched = np.array([[data.draw(st.integers(0, 1))
-                       for _ in range(n_senders)] for _ in range(rounds)])
+    rng = _rng(case)
+    n_senders = int(rng.integers(2, 6))
+    rounds = int(rng.integers(3, 13))
+    sched = rng.integers(0, 2, size=(rounds, n_senders))
     settle = np.zeros((rounds + 2 * n_senders + 6, n_senders), np.int64)
     st_final, _ = _run(n_senders, n_senders, np.vstack([sched, settle]))
     pub = np.asarray(st_final.published)
@@ -251,12 +272,13 @@ def test_sweep_stalls_without_nulls():
     assert int(np.asarray(st_ok.delivered_num).min()) > 30
 
 
-@settings(deadline=None, max_examples=15)
-@given(st.integers(2, 4), st.integers(1, 4), st.data())
-def test_sweep_window_cap_respected(n_senders, window, data):
-    rounds = data.draw(st.integers(3, 20))
-    sched = np.array([[data.draw(st.integers(0, 3))
-                       for _ in range(n_senders)] for _ in range(rounds)])
+@pytest.mark.parametrize("case", range(15))
+def test_sweep_window_cap_respected(case):
+    rng = _rng(case)
+    n_senders = int(rng.integers(2, 5))
+    window = int(rng.integers(1, 5))
+    rounds = int(rng.integers(3, 21))
+    sched = rng.integers(0, 4, size=(rounds, n_senders))
     stt = sweep.SweepState.init(n_senders, n_senders)
     for r in range(rounds):
         stt, _ = sweep.sweep(stt, jnp.asarray(sched[r], jnp.int32),

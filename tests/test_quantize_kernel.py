@@ -1,15 +1,12 @@
-"""int8 block-quantize Pallas kernel vs oracle + roundtrip error bounds."""
+"""int8 block-quantize Pallas kernel vs oracle + roundtrip error bounds.
 
-import pytest
+Property cases come from seeded numpy generators (no hypothesis in the
+container)."""
 
-pytest.importorskip("hypothesis")  # extras: skip, not a collection error
-
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.kernels.quantize import dequantize_pallas, quantize_pallas
 
@@ -39,9 +36,12 @@ def test_quantize_matches_ref(n, block, dtype):
         <= 1
 
 
-@settings(deadline=None, max_examples=10)
-@given(st.integers(1, 8), st.floats(0.01, 100.0))
-def test_roundtrip_error_bounded(nblocks, scale_mag):
+@pytest.mark.parametrize("case", range(10))
+def test_roundtrip_error_bounded(case):
+    rng = np.random.default_rng(33_000 + case)
+    nblocks = int(rng.integers(1, 9))
+    # log-uniform over [0.01, 100]: scale magnitudes spanning 4 decades
+    scale_mag = float(10.0 ** rng.uniform(-2, 2))
     block = 512
     x = jax.random.normal(jax.random.key(nblocks), (nblocks * block,),
                           jnp.float32) * scale_mag
