@@ -30,6 +30,11 @@ are simulated-time):
   shape preserved; ``reused_program`` asserts the new epoch dispatches
   the SAME cached program (no fresh-epoch restart), ``resend_msgs`` that
   traffic was genuinely in flight at the cut.
+* ``slot_failure``  — warm reconfigure-with-slot-kill: a serve replica
+  loses a publisher (slot) node mid-run; ``cut_s`` is the cut's own
+  wall clock (wedge + dead-slot accounting + decode void/re-admit,
+  DESIGN.md Secs. 7, 9) and ``reused_program`` asserts the shrunken
+  sender set dispatches on the same cached stacked program.
 
 Writes ``BENCH_hotpath.json`` at the repo root (committed — the perf
 baseline later PRs regress against).  ``--smoke`` runs tiny shapes and
@@ -70,11 +75,15 @@ FULL_GRID = (4, 8, 16, 24, 32, 48, 64, 100)
 FULL_TOPICS = dict(n_nodes=8, n_topics=16, samples=40)
 FULL_SERVE = dict(replicas=2, slots=3, reqs=5, prompt=4, new_tokens=6)
 FULL_VC = dict(n=8, senders=4, window=8, rounds=6, per_round=2)
+FULL_SLOTKILL = dict(replicas=2, slots=3, reqs=5, prompt=4,
+                     new_tokens=6, fail_round=2)
 SMOKE = dict(n=4, senders=2, msgs=24, window=8)
 SMOKE_GRID = (4, 6, 8, 12)
 SMOKE_TOPICS = dict(n_nodes=4, n_topics=16, samples=6)
 SMOKE_SERVE = dict(replicas=2, slots=2, reqs=3, prompt=3, new_tokens=4)
 SMOKE_VC = dict(n=4, senders=2, window=4, rounds=4, per_round=2)
+SMOKE_SLOTKILL = dict(replicas=2, slots=2, reqs=3, prompt=3,
+                      new_tokens=4, fail_round=2)
 
 # --smoke regression gate: fail when current > 3x baseline + slack.  The
 # slack absorbs CI-runner jitter on the millisecond-scale warm metrics but
@@ -324,7 +333,64 @@ def bench_view_change(shape, backend="graph"):
     }
 
 
-def run_suite(shape, grid, topics, serve, vc):
+def bench_slot_failure(shape, backend="graph"):
+    """Warm reconfigure-with-slot-kill: a serve replica loses a SLOT
+    (publisher) node mid-run — wedge + cut + dead-slot accounting +
+    in-flight decode voided and re-admitted on a surviving slot
+    (DESIGN.md Secs. 7, 9).  ``cut_s`` is the cut's own wall clock
+    (``ReplicatedEngine.cut_walls``); ``reused_program`` asserts the
+    warm cycles never re-trace — the shrunken sender set dispatches on
+    the SAME cached stacked program (padded S_max preserved by the
+    surviving replica)."""
+    from repro.core.group import TRACE_EVENTS
+    from repro.serve.engine import Request
+    from repro.serve.fanout import ReplicatedEngine
+
+    engines, cfg = _serve_engines(shape)
+    rep = ReplicatedEngine(engines, subscribers_per_replica=2, window=4,
+                           backend=backend)
+    kill = rep._slot_nodes[0][0]         # replica 0, slot 0
+
+    def run_once():
+        rep.reset()
+        rng = np.random.default_rng(0)
+        for g in range(shape["replicas"]):
+            for i in range(shape["reqs"]):
+                rep.submit(g, Request(
+                    rid=g * 100 + i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        shape["prompt"], dtype=np.int32),
+                    max_new_tokens=shape["new_tokens"]))
+        t0 = time.perf_counter()
+        report = rep.run(fail_at={shape["fail_round"]: [kill]})
+        return time.perf_counter() - t0, report
+
+    cold, _ = run_once()
+    n0 = len(TRACE_EVENTS)
+    best_cut, warm, report = float("inf"), float("inf"), None
+    for _ in range(3):
+        w, r = run_once()
+        if rep.cut_walls[0] < best_cut:
+            best_cut, report = rep.cut_walls[0], r
+        warm = min(warm, w)
+    serve = report.extras["serve"]
+    vc = rep.view_log[0][2].extras["view_change"]
+    return {
+        "replicas": shape["replicas"],
+        "slots": shape["slots"],
+        "cold_s": round(cold, 4),
+        "warm_s": round(warm, 4),
+        "cut_s": round(best_cut, 4),
+        "resend_msgs": int(vc["resend_msgs"]),
+        "slot_failures": serve["slot_failures"],
+        "voided_requests": serve["voided_requests"],
+        "requeued_requests": serve["requeued_requests"],
+        "drained": bool(serve["drained"]),
+        "reused_program": bool(len(TRACE_EVENTS) == n0),
+    }
+
+
+def run_suite(shape, grid, topics, serve, vc, slotkill):
     return {
         "repeated_run_graph": bench_repeated_run(shape, "graph"),
         "repeated_run_pallas": bench_repeated_run(shape, "pallas"),
@@ -332,12 +398,13 @@ def run_suite(shape, grid, topics, serve, vc):
         "many_topics_graph": bench_many_topics(topics, "graph"),
         "serve_fanout": bench_serve_fanout(serve, "graph"),
         "view_change": bench_view_change(vc, "graph"),
+        "slot_failure": bench_slot_failure(slotkill, "graph"),
     }
 
 
 def smoke_gate(baseline_path: Path) -> int:
     results = run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS, SMOKE_SERVE,
-                        SMOKE_VC)
+                        SMOKE_VC, SMOKE_SLOTKILL)
     if not baseline_path.exists():
         print(f"no baseline at {baseline_path}; smoke measured only")
         print(json.dumps(results, indent=1))
@@ -349,7 +416,8 @@ def smoke_gate(baseline_path: Path) -> int:
                           ("window_grid_graph", "batch_s"),
                           ("many_topics_graph", "stacked_warm_s"),
                           ("serve_fanout", "warm_s"),
-                          ("view_change", "reconfigure_s")):
+                          ("view_change", "reconfigure_s"),
+                          ("slot_failure", "cut_s")):
         cur = results[bench][metric]
         ref = base.get(bench, {}).get(metric)
         if ref is None:
@@ -371,6 +439,14 @@ def smoke_gate(baseline_path: Path) -> int:
         print("view_change: a shape-preserving cut re-traced the stream "
               "program (fresh-epoch restart regression)")
         failures.append("view_change.reused_program")
+    if not results["slot_failure"]["reused_program"]:
+        print("slot_failure: a slot-kill cut re-traced the stream "
+              "program (fresh-epoch restart regression)")
+        failures.append("slot_failure.reused_program")
+    if not results["slot_failure"]["drained"]:
+        print("slot_failure: the serve plane failed to drain after the "
+              "slot kill")
+        failures.append("slot_failure.drained")
     if failures:
         print(f"bench-smoke FAILED: {failures}")
         return 1
@@ -389,17 +465,19 @@ def main() -> int:
     record = {
         "pre_pr_baseline": PRE_PR,
         "full": run_suite(FULL, FULL_GRID, FULL_TOPICS, FULL_SERVE,
-                          FULL_VC),
+                          FULL_VC, FULL_SLOTKILL),
         "smoke": run_suite(SMOKE, SMOKE_GRID, SMOKE_TOPICS, SMOKE_SERVE,
-                           SMOKE_VC),
+                           SMOKE_VC, SMOKE_SLOTKILL),
         "scenario": {"full": {**FULL, "grid": list(FULL_GRID),
                               "topics": dict(FULL_TOPICS),
                               "serve": dict(FULL_SERVE),
-                              "view_change": dict(FULL_VC)},
+                              "view_change": dict(FULL_VC),
+                              "slot_failure": dict(FULL_SLOTKILL)},
                      "smoke": {**SMOKE, "grid": list(SMOKE_GRID),
                                "topics": dict(SMOKE_TOPICS),
                                "serve": dict(SMOKE_SERVE),
-                               "view_change": dict(SMOKE_VC)}},
+                               "view_change": dict(SMOKE_VC),
+                               "slot_failure": dict(SMOKE_SLOTKILL)}},
     }
     full = record["full"]
     full["vs_pre_pr"] = {
@@ -425,7 +503,10 @@ def main() -> int:
           and full["serve_fanout"]["one_program"]
           and full["serve_fanout"]["tok_per_s_warm"] > 0
           and full["view_change"]["reused_program"]
-          and full["view_change"]["resend_msgs"] > 0)
+          and full["view_change"]["resend_msgs"] > 0
+          and full["slot_failure"]["reused_program"]
+          and full["slot_failure"]["drained"]
+          and full["slot_failure"]["slot_failures"] == 1)
     print("acceptance:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -1713,11 +1713,12 @@ class GroupStream:
             resend=tuple(resend_t), stable_apps=tuple(stable_t),
             app_base=tuple(base_t))
         self._close_at_cut(cut_seqs, alive, new_group.carry,
-                           app_pub, nulls)
+                           app_pub, nulls, stable)
         return new_group.stream(backend=self.backend.name)
 
     def _close_at_cut(self, cut_seqs: Dict[int, int], alive,
-                      carry: EpochCarry, app_pub, nulls) -> None:
+                      carry: EpochCarry, app_pub, nulls,
+                      stable_by_old_rank: Dict[int, np.ndarray]) -> None:
         """Finalize the closing epoch's logs/report with every surviving
         member's delivery advanced to the ragged trim."""
         cfg = self.group.cfg
@@ -1751,6 +1752,14 @@ class GroupStream:
         report.extras["view_change"] = {
             "cut_seq": {g: int(c) for g, c in cut_seqs.items()},
             "resend_msgs": carry.total_resend(),
+            # Stable app counts in the OLD view's rank space (the carry's
+            # stable_apps are remapped to the new view and drop failed
+            # senders): a failed sender's stable prefix is only visible
+            # here.  The serve plane reads it to account a dead slot's
+            # delivered apps; gradsync reads it to cap a dead
+            # contributor's deliverable watermark.
+            "stable_apps_by_old_rank": {
+                g: s.copy() for g, s in stable_by_old_rank.items()},
         }
         self.group.delivery_logs = agg.logs
         self.group.last_report = report

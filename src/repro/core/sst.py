@@ -182,6 +182,45 @@ def ragged_trim(received_num, alive) -> int:
     return int(received_num[alive].min())
 
 
+def cascading_trim(received_num, alive_stages) -> list:
+    """Fold a cascade of suspicion waves into one cut (DESIGN.md Sec. 7).
+
+    ``alive_stages`` is the survivor mask after each successive wave of
+    suspicions that landed while the wedge was in progress; each stage
+    must be a subset of the previous one (suspicions are monotone within
+    a view — a stage that *gains* a survivor is a caller bug and
+    raises).  Returns the per-stage :func:`ragged_trim` values.
+
+    The sequence is non-decreasing by construction while survivors
+    remain: removing a member from the min-over-survivors can only RAISE
+    the stable frontier.  That monotonicity is exactly why
+    :meth:`repro.core.views.MembershipService.propose_and_install` may
+    fold late suspicions into the pending cut instead of installing a
+    doomed intermediate view — the final stage's trim (the one the
+    installed view uses) covers every message any earlier stage would
+    have delivered, so no delivery watermark ever rolls back.  The
+    intermediate values exist for diagnostics: the chaos harness asserts
+    the monotone property on every sampled cascade.  A stage with no
+    survivors yields -1 (total failure; the membership service raises
+    before using such a stage).
+    """
+    received_num = np.asarray(received_num)
+    trims: list = []
+    prev = None
+    for alive in alive_stages:
+        alive = np.asarray(alive, dtype=bool)
+        if prev is not None and bool((alive & ~prev).any()):
+            raise ValueError(
+                "cascade stages must only shrink the survivor set "
+                "(suspicions are monotone within a view)")
+        trims.append(ragged_trim(received_num, alive))
+        if (prev is not None and trims[-1] >= 0
+                and trims[-1] < trims[-2]):  # pragma: no cover - by construction
+            raise AssertionError("cascading trim rolled a watermark back")
+        prev = alive
+    return trims
+
+
 def sender_counts(seq_prefix, n_senders: int):
     """Inverse-ish of rr_prefix: per-sender message counts contained in the
     first ``seq_prefix`` messages of the round-robin order."""

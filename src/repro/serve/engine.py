@@ -21,7 +21,7 @@ caches — dense/moe/vlm/encdec families), where an idle slot's garbage
 write is harmlessly overwritten at its own position.  Recurrent families
 (ssm/hybrid) mutate state on every step and would need a validity-masked
 state update (the null-round mask of repro.core.gradsync, applied to
-decode) — explicitly deferred in DESIGN.md Sec. 9 (future work).
+decode) — explicitly deferred in DESIGN.md Sec. 11 (future work).
 """
 
 from __future__ import annotations
@@ -197,6 +197,25 @@ class ServeEngine:
                 info.finished.append(i)
                 info.finished_rids.append(req.rid)
         return info
+
+    def evict(self, slot: int) -> Optional[Request]:
+        """Forcibly clear a slot and void its in-flight decode.
+
+        The serve plane calls this when the slot's NODE dies mid-run
+        (DESIGN.md Sec. 7): the request's decoded tokens are discarded —
+        its unstable published tail died with the slot, and re-admission
+        restarts the decode from the prompt on a surviving slot — and
+        the request object is returned to the caller for re-admission or
+        shed (the policy lives in the fan-out, DESIGN.md Sec. 9).  Stale
+        KV entries are position-overwritten on the next prefill, exactly
+        as after :meth:`reset`.  Returns ``None`` if the slot was idle.
+        """
+        req = self.slot_req[slot]
+        self.slot_req[slot] = None
+        self.slot_len[slot] = 0
+        if req is not None:
+            req.tokens_out = []
+        return req
 
     def drained(self) -> bool:
         return not self.queue and all(r is None for r in self.slot_req)

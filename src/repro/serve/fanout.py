@@ -54,6 +54,23 @@ StallFn = Callable[[int, int], Sequence[int]]
 ArriveFn = Callable[[int, int], Sequence[Request]]
 
 
+def _as_waves(spec) -> List[List[int]]:
+    """Normalize one ``fail_at`` value: a flat node sequence is a single
+    suspicion batch; a sequence of sequences is a CASCADE — later waves
+    land while the wedge for the first is in progress and fold into the
+    same installed view (DESIGN.md Sec. 7).  Mixing the two shapes in
+    one value is ambiguous and raises."""
+    spec = list(spec)
+    nested = [isinstance(w, (list, tuple, set, frozenset)) for w in spec]
+    if all(nested) and spec:
+        return [sorted(int(n) for n in w) for w in spec if w]
+    if any(nested):
+        raise ValueError(
+            "fail_at value mixes node ids and waves: use either a flat "
+            "sequence of nodes or a sequence of waves")
+    return [sorted(int(n) for n in spec)] if spec else []
+
+
 @dataclasses.dataclass
 class _SlotHold:
     """A completed request whose slot awaits the delivery watermark."""
@@ -96,6 +113,8 @@ class ReplicatedEngine:
         node = 0
         self.domain = dds.Domain(n_nodes=0)
         self.topics: List[dds.Topic] = []
+        self._slot_nodes: List[List[int]] = []   # replica -> slot -> node
+        self._node_to_slot: Dict[int, Tuple[int, int]] = {}  # node -> (g, s)
         for g, b in enumerate(self._slots):
             slot_nodes = list(range(node, node + b))
             subs = list(range(node + b,
@@ -105,6 +124,9 @@ class ReplicatedEngine:
             self.topics.append(self.domain.create_topic(
                 f"replica-{g}", publishers=slot_nodes, subscribers=subs,
                 sample_size=sample_size, qos=qos, window=window))
+            self._slot_nodes.append(slot_nodes)
+            for s, n in enumerate(slot_nodes):
+                self._node_to_slot[n] = (g, s)
         # per-run traces (tests read these)
         self.admit_rounds: Dict[int, int] = {}       # rid -> engine round
         self.admit_slots: Dict[int, Tuple[int, int]] = {}  # rid -> (g, s)
@@ -144,6 +166,21 @@ class ReplicatedEngine:
         self._last_view = None
         self.view_log = []
         self._failed: set = set()
+        # slot-node failure state: dead engine slots per replica, and the
+        # live slot <-> sender-rank maps of the CURRENT view (a cut that
+        # removes a slot node compacts the surviving slots, in slot
+        # order, onto sender ranks 0..k-1 — declaration order is
+        # preserved by dds reconfigure, so rank order == slot order)
+        self._dead_slots: List[set] = [set() for _ in range(g_n)]
+        self._rank_slot: List[List[int]] = [list(range(b))
+                                            for b in self._slots]
+        self._slot_rank: List[Dict[int, int]] = [
+            {s: s for s in range(b)} for b in self._slots]
+        self.slot_failures: List[Dict[str, object]] = []
+        self.cut_walls: List[float] = []   # per installed view (wall s)
+        # failures drive a real membership service so cascading waves
+        # fold into ONE installed view (views.py propose_and_install)
+        self._ms = views_mod.MembershipService(range(self.domain.n_nodes))
 
     def _sync_holds(self, stream, view, round_no: int):
         """Pin each pending hold to its last app message's publish index
@@ -154,49 +191,139 @@ class ReplicatedEngine:
             watermark = view.sender_delivered(g)
             for slot in list(self._holds[g]):
                 hold = self._holds[g][slot]
+                rank = self._slot_rank[g][slot]   # holds live on live slots
                 if hold.last_idx is None:
                     hold.last_idx = stream.app_publish_index(
-                        g, slot, hold.target_apps)
+                        g, rank, hold.target_apps)
                 if hold.last_idx is not None and \
-                        watermark[slot] > hold.last_idx:
+                        watermark[rank] > hold.last_idx:
                     del self._holds[g][slot]
                     self.free_rounds.append((g, slot, round_no))
 
-    def _fail_subscribers(self, bound: dds.BoundDomain,
-                          nodes: Sequence[int], round_no: int
-                          ) -> dds.BoundDomain:
-        """Install a new view without the given subscriber nodes and
-        re-pin every pending slot hold against the new epoch.
+    def _fail_nodes(self, bound: dds.BoundDomain,
+                    waves: Sequence[Sequence[int]], round_no: int,
+                    admission: Optional[ServeAdmission]
+                    ) -> dds.BoundDomain:
+        """Install ONE new view without the given nodes — subscribers
+        and/or slot (publisher) nodes, possibly in cascading suspicion
+        waves — and carry the serve state across the cut.
 
-        The cut (``GroupStream.reconfigure`` under the bound domain)
-        restarts per-sender publish numbering, so a hold's
-        ``target_apps`` — the k-th app publish its release waits on — is
-        rebased by the apps that went STABLE at the cut
-        (``EpochCarry.stable_apps``): if its last message was already
-        delivered everywhere the hold frees right here; otherwise the
-        remainder rides the resend backlog and the hold re-pins from the
-        new epoch's traces (``last_idx`` reset).  The engine-side
-        enqueued counters rebase identically, keeping them equal to the
-        new stream's epoch-local enqueued counts."""
-        self._failed |= set(nodes)
-        members = tuple(sorted(set(range(self.domain.n_nodes))
-                               - self._failed))
-        vid = len(self.view_log) + 1
-        view = views_mod.View(vid=vid, members=members, senders=members)
+        **Cascade folding.**  ``waves[0]`` is the suspicion batch that
+        triggers the wedge; each later wave lands *while the wedge is in
+        progress* and folds into the same pending cut via
+        :meth:`views.MembershipService.propose_and_install`'s
+        ``during_wedge`` hook — exactly one view installs for the whole
+        cascade, its trim computed over the final survivors (DESIGN.md
+        Sec. 7).
+
+        **Surviving slots.**  The cut restarts per-sender publish
+        numbering, so a hold's ``target_apps`` — the k-th app publish
+        its release waits on — is rebased by the apps that went STABLE
+        at the cut (``EpochCarry.stable_apps``): if its last message was
+        already delivered everywhere the hold frees right here;
+        otherwise the remainder rides the resend backlog and the hold
+        re-pins from the new epoch's traces (``last_idx`` reset).  The
+        engine-side enqueued counters rebase identically, keeping them
+        equal to the new stream's epoch-local enqueued counts.
+
+        **Dead slots.**  A failed slot node's messages up to the ragged
+        trim were delivered at every survivor (read off the closing
+        report's ``stable_apps_by_old_rank`` — the carry drops dead
+        senders); its unstable tail is delivered nowhere and dies with
+        it.  The slot's hold (if its request had finished) is dropped —
+        there is no slot left to free.  An in-flight decode is VOIDED
+        (:meth:`ServeEngine.evict`): the request re-enters the head of
+        the replica's admission queue to restart from its prompt on a
+        surviving slot, or is shed if the queue is at ``queue_cap``
+        (DESIGN.md Sec. 9 records this re-admission policy).  Surviving
+        slots compact, in slot order, onto the new view's sender ranks.
+        Raises if a replica would lose its last live slot — the engine
+        would have no publisher lane left (a full-replica failure is a
+        domain teardown, not a view change).
+
+        Every event lands in :attr:`slot_failures`; each installed view
+        is appended to :attr:`view_log` and its wall clock to
+        :attr:`cut_walls`."""
+        t0 = time.perf_counter()
+        waves = [sorted(set(w)) for w in waves if w]
+        failing = set().union(*[set(w) for w in waves])
+        dead_by_g: Dict[int, set] = {}
+        for n in failing:
+            if n in self._node_to_slot:
+                g, s = self._node_to_slot[n]
+                dead_by_g.setdefault(g, set()).add(s)
+        for g, dead in dead_by_g.items():
+            if len(self._dead_slots[g] | dead) >= self._slots[g]:
+                raise ValueError(
+                    f"fail_at round {round_no} would kill every slot "
+                    f"node of replica {g}: the engine would have no "
+                    "publisher lane left — a full-replica failure is a "
+                    "domain teardown, not a view change")
+        ms = self._ms
+        reporter = next((m for m in ms.view.members if m not in failing),
+                        ms.view.members[0])
+        for n in waves[0]:
+            ms.suspect(reporter, n)
+
+        def _during_wedge(svc, attempt):
+            nxt = attempt + 1
+            if nxt < len(waves):
+                for n in waves[nxt]:
+                    svc.suspect(reporter, n)
+
+        old_rank_slot = [list(r) for r in self._rank_slot]
+        view = ms.propose_and_install(
+            {}, during_wedge=_during_wedge if len(waves) > 1 else None)
         new_bound, old_report, old_logs = bound.reconfigure(view)
         carry = new_bound.stream.carry
-        for g in range(len(self.engines)):
-            delta = np.zeros(self._slots[g], np.int64)
+        stable_old = \
+            old_report.extras["view_change"]["stable_apps_by_old_rank"]
+        self._failed |= failing
+        for g, eng in enumerate(self.engines):
+            # dead slots first: account their stable prefix, void the
+            # in-flight decode, drop their hold
+            for slot in sorted(dead_by_g.get(g, ())):
+                old_rank = old_rank_slot[g].index(slot)
+                stable_cnt = int(stable_old[g][old_rank])
+                rec = {"round": round_no, "replica": g, "slot": slot,
+                       "node": self._slot_nodes[g][slot],
+                       "stable_apps": stable_cnt,
+                       "lost_apps":
+                           int(self._apps_enqueued[g][slot]) - stable_cnt,
+                       "voided_rid": None, "requeued": False,
+                       "hold_dropped": slot in self._holds[g]}
+                self._holds[g].pop(slot, None)
+                req = eng.evict(slot)
+                if req is not None:
+                    rec["voided_rid"] = req.rid
+                    if (admission is not None
+                            and admission.queue_cap is not None
+                            and len(eng.queue) >= admission.queue_cap):
+                        self.shed_log.append((req.rid, round_no))
+                    else:
+                        eng.queue.appendleft(req)  # oldest work first
+                        rec["requeued"] = True
+                self._apps_enqueued[g][slot] = 0
+                self._dead_slots[g].add(slot)
+                self.slot_failures.append(rec)
+            self._rank_slot[g] = [s for s in range(self._slots[g])
+                                  if s not in self._dead_slots[g]]
+            self._slot_rank[g] = {s: r for r, s in
+                                  enumerate(self._rank_slot[g])}
+            # surviving slots: rebase by what went stable at the cut
             stable = carry.stable_apps[g]
-            delta[: len(stable)] = stable
-            self._apps_enqueued[g] = self._apps_enqueued[g] - delta
-            for slot, hold in list(self._holds[g].items()):
-                hold.target_apps -= int(delta[slot])
-                hold.last_idx = None            # old-epoch index is void
-                if hold.target_apps <= 0:       # stable at the cut: free
-                    del self._holds[g][slot]
-                    self.free_rounds.append((g, slot, round_no))
+            for new_rank, slot in enumerate(self._rank_slot[g]):
+                d = int(stable[new_rank])
+                self._apps_enqueued[g][slot] -= d
+                hold = self._holds[g].get(slot)
+                if hold is not None:
+                    hold.target_apps -= d
+                    hold.last_idx = None        # old-epoch index is void
+                    if hold.target_apps <= 0:   # stable at the cut: free
+                        del self._holds[g][slot]
+                        self.free_rounds.append((g, slot, round_no))
         self.view_log.append((round_no, view, old_report, old_logs))
+        self.cut_walls.append(time.perf_counter() - t0)
         self._last_view = None       # old-epoch watermarks are void
         return new_bound
 
@@ -239,29 +366,29 @@ class ReplicatedEngine:
         :attr:`finish_round_by_rid`; per-round totals in
         :attr:`queue_depth_log` / :attr:`backlog_log`.
 
-        ``fail_at`` maps an engine round to SUBSCRIBER node ids that
-        fail after that round's multicast dispatch: the serve plane then
-        survives a mid-stream view change through the virtual-synchrony
-        cut (DESIGN.md Sec. 7) — in-flight admissions/tokens are
-        delivered everywhere at the ragged trim or resent in the new
-        view's stream, and every pending slot hold is RE-PINNED against
-        the new epoch's watermarks (its target rebased by the apps that
-        went stable at the cut; a hold whose last message was already
-        stable frees immediately).  Slot (publisher) nodes cannot fail:
-        a slot IS an engine KV slot, and killing one would shrink the
-        engine itself — see DESIGN.md Sec. 8 (Deviations).  Each
-        installed view is recorded in :attr:`view_log` with the closing
-        epoch's report and cut-clipped per-topic logs."""
+        ``fail_at`` maps an engine round to node ids that fail after
+        that round's multicast dispatch — SUBSCRIBER nodes and/or SLOT
+        (publisher) nodes, in any mix: the serve plane survives the
+        mid-stream view change through the virtual-synchrony cut
+        (DESIGN.md Sec. 7).  In-flight admissions/tokens are delivered
+        everywhere at the ragged trim or resent in the new view's
+        stream; every pending slot hold is RE-PINNED against the new
+        epoch's watermarks; a dead slot node's unstable tail dies with
+        it, its in-flight decode is voided and the request re-admitted
+        or shed (see :meth:`_fail_nodes`; policy in DESIGN.md Sec. 9).
+        A value may also be a sequence of node sequences — *cascading
+        suspicion waves* that land while the wedge is in progress and
+        fold into ONE installed view.  Each installed view is recorded
+        in :attr:`view_log` with the closing epoch's report and
+        cut-clipped per-topic logs; slot-kill events in
+        :attr:`slot_failures`.  Scheduled rounds the run never reaches
+        (the engines drained first — e.g. an earlier cut re-admitted
+        work sooner) are NOT an error: they surface in
+        ``extras["serve"]["fail_at_unreached"]``."""
         self._reset_run_state()
-        fail_at = dict(fail_at or {})
-        slot_nodes = {p for t in self.topics for p in t.publishers}
-        for rnd, nodes in fail_at.items():
-            bad = set(nodes) & slot_nodes
-            if bad:
-                raise ValueError(
-                    f"fail_at round {rnd} names slot (publisher) nodes "
-                    f"{sorted(bad)}; only subscriber nodes may fail — "
-                    "slots are the engine's KV slots")
+        fail_at = {int(r): _as_waves(spec)
+                   for r, spec in (fail_at or {}).items()}
+        fail_at = {r: w for r, w in fail_at.items() if w}
         bound = self.domain.bind(backend=self.backend)
         wall0 = time.perf_counter()
         # serve metrics are per-RUN deltas: engines accumulate completed
@@ -294,25 +421,33 @@ class ReplicatedEngine:
                 if (admission is not None
                         and admission.stall_backlog is not None
                         and self._last_view is not None):
-                    v, b = self._last_view, self._slots[g]
-                    inflight = (v.published[g, :b]
-                                - v.sender_delivered(g)[:b]
-                                + v.backlog[g, :b])
-                    stalled |= {int(s) for s in np.nonzero(
-                        inflight > admission.stall_backlog)[0]}
+                    v, k = self._last_view, len(self._rank_slot[g])
+                    inflight = (v.published[g, :k]
+                                - v.sender_delivered(g)[:k]
+                                + v.backlog[g, :k])
+                    stalled |= {self._rank_slot[g][int(r)] for r in
+                                np.nonzero(inflight
+                                           > admission.stall_backlog)[0]}
                 held = self._holds[g]
-                mask = [s not in held for s in range(self._slots[g])]
+                dead = self._dead_slots[g]
+                mask = [s not in held and s not in dead
+                        for s in range(self._slots[g])]
                 info = eng.step(stalled=tuple(sorted(stalled)),
                                 admit_mask=mask)
                 self.stall_rounds += len(info.stalled)
-                c = np.zeros(self._slots[g], np.int64)
+                # counts are indexed by the CURRENT view's sender ranks
+                # (surviving slots compacted in slot order)
+                c = np.zeros(len(self._rank_slot[g]), np.int64)
+                rank = self._slot_rank[g]
                 for slot, rid in zip(info.admitted, info.admitted_rids):
-                    c[slot] += 1               # the admitted-request batch
+                    c[rank[slot]] += 1         # the admitted-request batch
                     self.admit_rounds[rid] = round_no
                     self.admit_slots[rid] = (g, slot)
                 for slot in info.emitted:
-                    c[slot] += 1               # the emitted token
-                self._apps_enqueued[g] += c
+                    c[rank[slot]] += 1         # the emitted token
+                    self._apps_enqueued[g][slot] += 1
+                for slot in info.admitted:
+                    self._apps_enqueued[g][slot] += 1
                 for slot in info.finished:
                     self._holds[g][slot] = _SlotHold(
                         target_apps=int(self._apps_enqueued[g][slot]),
@@ -324,19 +459,18 @@ class ReplicatedEngine:
             view = bound.push_round(counts_by_topic)
             self._last_view = view
             self.backlog_log.append(int(sum(
-                int(view.backlog[g, :self._slots[g]].sum())
+                int(view.backlog[g, :len(self._rank_slot[g])].sum())
                 for g in range(len(self.engines)))))
             self._sync_holds(bound.stream, view, round_no)
             if round_no in fail_at:
-                bound = self._fail_subscribers(bound, fail_at[round_no],
-                                               round_no)
+                bound = self._fail_nodes(bound, fail_at[round_no],
+                                         round_no, admission)
             round_no += 1
+        # A scheduled failure the run never reached became moot (an
+        # earlier cut / drain landed first): surface it rather than
+        # raise — the chaos harness samples schedules without knowing
+        # drain times in advance (satellite of DESIGN.md Sec. 7).
         unreached = sorted(r for r in fail_at if r >= round_no)
-        if unreached:
-            raise ValueError(
-                f"fail_at rounds {unreached} were never reached (the "
-                f"engines drained after {round_no} rounds) — the failure "
-                "path would be silently untested")
         report, logs = bound.finish(settle_max=settle_max)
         # release holds the settle rounds delivered — including holds
         # whose last app message was still window-throttled when the
@@ -361,6 +495,13 @@ class ReplicatedEngine:
             "stall_rounds": self.stall_rounds,
             "held_slots": sum(len(h) for h in self._holds),
             "view_changes": len(self.view_log),
+            "slot_failures": len(self.slot_failures),
+            "voided_requests": sum(1 for r in self.slot_failures
+                                   if r["voided_rid"] is not None),
+            "requeued_requests": sum(1 for r in self.slot_failures
+                                     if r["requeued"]),
+            "slot_failure_log": list(self.slot_failures),
+            "fail_at_unreached": unreached,
             "shed_requests": len(self.shed_log),
             "max_queue_depth": max(self.queue_depth_log, default=0),
             "max_backlog": max(self.backlog_log, default=0),

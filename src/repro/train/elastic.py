@@ -18,6 +18,14 @@ The control flow on a real cluster (and, deterministically, in tests):
 
 The in-process harness below exercises all of that logic with simulated
 failures so it is testable on one CPU.
+
+With a gradient stream attached (:meth:`ElasticRuntime
+.attach_gradient_stream` -> :class:`repro.core.gradsync.BucketSyncStream`)
+step 3 changes character: the resize is a real virtual-synchrony CUT —
+wedge, ragged trim, ``EpochCarry`` resend (DESIGN.md Sec. 7) — in-flight
+bucket rounds survive the view change instead of being recomputed, and
+``delivered_step`` tracks the stream's monotone applied watermark (no
+rollback).
 """
 
 from __future__ import annotations
@@ -56,6 +64,9 @@ class ElasticRuntime:
             m: WorkerState(node=m) for m in members}
         self.round = 0
         self.view_changes: List[View] = []
+        # optional multicast gradient plane (attach_gradient_stream)
+        self.gradsync = None
+        self._update_fn: Optional[Callable[[int, int], Any]] = None
 
     @property
     def view(self) -> View:
@@ -70,6 +81,21 @@ class ElasticRuntime:
     def join(self, node: int):
         self.membership.request_join(node)
         self.workers.setdefault(node, WorkerState(node=node))
+
+    def attach_gradient_stream(self, gradsync,
+                               update_fn: Callable[[int, int], Any]):
+        """Route this runtime's rounds through a
+        :class:`repro.core.gradsync.BucketSyncStream`: each round's
+        contributors publish ``update_fn(node, round)`` as fused bucket
+        messages, updates apply in the multicast total order once
+        delivered everywhere, and a resize becomes a REAL
+        virtual-synchrony cut — wedge, ragged trim, ``EpochCarry``
+        resend (DESIGN.md Sec. 7) — instead of the rollback-to-watermark
+        restart below: a survivor's in-flight buckets are resent in the
+        new view, a dead worker's unstable tail is voided, and no
+        worker's ``delivered_step`` ever rolls back."""
+        self.gradsync = gradsync
+        self._update_fn = update_fn
 
     def step(self) -> Dict[str, Any]:
         """One global training round: returns which members contributed,
@@ -87,8 +113,19 @@ class ElasticRuntime:
                 w.heartbeat += 1      # still alive, just slow
                 continue
             w.heartbeat += 1
-            w.delivered_step += 1
+            if self.gradsync is None:
+                w.delivered_step += 1
             contributed.append(m)
+        if self.gradsync is not None:
+            # publish this round's bucket set; delivered_step advances
+            # with the stream's applied watermark, not local application
+            self.gradsync.contribute({
+                m: self._update_fn(m, self.round) for m in contributed})
+            applied = self.gradsync.applied_step
+            for m in view.members:
+                w = self.workers[m]
+                if w.alive:
+                    w.delivered_step = max(w.delivered_step, applied)
         # failure detection from heartbeat watermarks
         expect = max((self.workers[m].heartbeat for m in view.members
                       if self.workers[m].alive), default=0)
@@ -103,22 +140,44 @@ class ElasticRuntime:
         if self.membership.needs_change():
             committed = {m: self.workers[m].delivered_step
                          for m in view.members if self.workers[m].alive}
-            changed = self.membership.propose_and_install(committed)
-            self.view_changes.append(changed)
-            watermark = self.membership.restart_watermark()
-            for m in changed.members:
-                w = self.workers.setdefault(m, WorkerState(node=m))
-                # virtual-synchrony cleanup: roll back past the watermark
-                w.delivered_step = watermark
-                w.heartbeat = max(self.workers[n].heartbeat
-                                  for n in changed.members
-                                  if n in self.workers)
+            if self.gradsync is not None:
+                # a REAL cut: the stream wedges and trims, survivors'
+                # in-flight buckets become resend backlog, and nobody's
+                # delivered_step moves backwards — the applied watermark
+                # is monotone across the cut by construction
+                changed, self.gradsync = \
+                    self.membership.reconfigure_stream(self.gradsync,
+                                                       committed)
+                self.view_changes.append(changed)
+                applied = self.gradsync.applied_step
+                beat = max((self.workers[n].heartbeat
+                            for n in changed.members
+                            if n in self.workers), default=0)
+                for m in changed.members:
+                    w = self.workers.setdefault(m, WorkerState(node=m))
+                    w.delivered_step = max(w.delivered_step, applied)
+                    w.heartbeat = beat
+            else:
+                changed = self.membership.propose_and_install(committed)
+                self.view_changes.append(changed)
+                watermark = self.membership.restart_watermark()
+                for m in changed.members:
+                    w = self.workers.setdefault(m, WorkerState(node=m))
+                    # virtual-synchrony cleanup: roll back past the
+                    # watermark (the restart-style path, kept for
+                    # runtimes without a gradient stream attached)
+                    w.delivered_step = watermark
+                    w.heartbeat = max(self.workers[n].heartbeat
+                                      for n in changed.members
+                                      if n in self.workers)
         return {
             "round": self.round,
             "contributed": contributed,
             "null_rounds": nulls,
             "view_change": changed.vid if changed else None,
             "dp_size": len(self.view.members),
+            "applied_step": (self.gradsync.applied_step
+                             if self.gradsync is not None else None),
         }
 
     def restart_watermark(self) -> int:

@@ -1,0 +1,347 @@
+"""Chaos plane (DESIGN.md Sec. 7): cascading suspicions during wedge,
+membership-service failure semantics, the seeded fault-injection
+harness, and the gradient plane's stream-routed cut.
+
+Fast tier: the sampling and folding machinery — FaultSpec determinism
+and structural constraints, ``suspect`` distinguishing already-removed
+from never-a-member, cascade folding into ONE installed view,
+``WedgeAborted``/``TotalFailureError`` error paths,
+``sst.cascading_trim`` monotonicity, a small stream soak, and the
+gradsync-through-GroupStream vs direct-bucketing equivalence under an
+elastic resize.
+
+Soak tier (``-m soak``, the CI ``chaos-soak`` job): full seeded soaks
+over the stream, serve, and gradient planes — graph vs pallas reports
+bit-identical for every seed.  ``CHAOS_SEEDS`` (comma-separated)
+overrides the seed set; CI fans one seed per matrix entry.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.chaos import (ChaosReport, FaultSpec, chaos_soak,
+                         events_by_round)
+from repro.core import sst
+from repro.core.gradsync import BucketSyncStream
+from repro.core.views import (MembershipService, TotalFailureError,
+                              WedgeAborted)
+from repro.train.elastic import ElasticConfig, ElasticRuntime
+
+fast = pytest.mark.fast
+soak = pytest.mark.soak
+
+CHAOS_SEEDS = tuple(int(s) for s in
+                    os.environ.get("CHAOS_SEEDS", "11,23,47").split(","))
+
+
+# ---------------------------------------------------------------------------
+# fault sampling
+# ---------------------------------------------------------------------------
+
+
+@fast
+def test_faultspec_sampling_is_deterministic_and_respects_floors():
+    spec = FaultSpec(rounds=40, suspect_rate=0.3, cascade_prob=0.5,
+                     join_rate=0.2, slot_kill_rate=0.3, stall_rate=0.2,
+                     max_kills=5)
+    kw = dict(killable=range(10, 20), joinable=(30, 31),
+              slot_groups=((0, 1, 2), (3, 4)))
+    a = spec.sample(np.random.default_rng(7), **kw)
+    b = spec.sample(np.random.default_rng(7), **kw)
+    assert a == b, "same seed must draw the same schedule"
+    assert a != spec.sample(np.random.default_rng(8), **kw)
+    kills = [n for ev in a if ev.kind in ("suspect", "slot_kill")
+             for w in ([ev.nodes] + list(ev.cascade)) for n in w]
+    assert len(kills) == len(set(kills)) <= 5, "max_kills cap violated"
+    assert all(n in set(range(10, 20)) for ev in a
+               if ev.kind == "suspect"
+               for w in ([ev.nodes] + list(ev.cascade)) for n in w)
+    # slot kills never drain a replica's last publisher lane
+    slot_kills = [ev.nodes[0] for ev in a if ev.kind == "slot_kill"]
+    assert len([n for n in slot_kills if n in (0, 1, 2)]) <= 2
+    assert len([n for n in slot_kills if n in (3, 4)]) <= 1
+    rounds = sorted({ev.round for ev in a})
+    assert rounds == sorted(events_by_round(a)) and rounds[-1] < 40
+    for ev in a:
+        if ev.kind == "stall":
+            assert 1 <= ev.length <= 3
+
+
+# ---------------------------------------------------------------------------
+# membership semantics: stale suspicions, cascades, error paths
+# ---------------------------------------------------------------------------
+
+
+@fast
+def test_suspect_distinguishes_removed_from_never_member():
+    ms = MembershipService([0, 1, 2, 3])
+    ms.suspect(0, 3)
+    ms.propose_and_install({})
+    assert 3 not in ms.view.members
+    # already-removed member: a recorded no-op, NOT an error (late
+    # detectors double-report after the cut lands)
+    before = ms.view.vid
+    ms.suspect(1, 3)
+    assert ms.view.vid == before and not ms.needs_change()
+    assert (1, 3, before) in ms.stale_suspicions
+    # never a member of ANY view: a caller bug, loudly
+    with pytest.raises(ValueError, match="never a member"):
+        ms.suspect(0, 99)
+
+
+@fast
+def test_cascading_suspicions_fold_into_one_view():
+    ms = MembershipService([0, 1, 2, 3, 4, 5])
+
+    def _wedge(svc, attempt):
+        if attempt == 0:
+            svc.suspect(0, 4)        # lands while the wedge is open
+
+    v = ms.propose_and_install({}, during_wedge=None)  # no-op baseline
+    vid0 = v.vid
+    ms.suspect(0, 5)
+    v = ms.propose_and_install({}, during_wedge=_wedge)
+    # ONE vid consumed for the whole cascade; both victims gone
+    assert v.vid == vid0 + 1
+    assert set(v.members) == {0, 1, 2, 3}
+    assert ms.wedge_retries == 1
+
+
+@fast
+def test_wedge_cascade_error_paths():
+    # unbounded cascade: every re-entered wedge finds a new suspicion
+    ms = MembershipService(range(12))
+    ms.suspect(0, 11)
+
+    def _endless(svc, attempt):
+        svc.suspect(0, 10 - attempt)
+
+    with pytest.raises(WedgeAborted, match="max_wedge_retries"):
+        ms.propose_and_install({}, during_wedge=_endless,
+                               max_wedge_retries=3)
+    # total failure: the cascade consumed every member
+    ms2 = MembershipService([0, 1])
+    ms2.suspect(0, 0)
+    ms2.suspect(0, 1)
+    with pytest.raises(TotalFailureError):
+        ms2.propose_and_install({})
+
+
+@fast
+def test_cascading_trim_is_monotone_and_rejects_growth():
+    col = np.array([7, 4, 9, 2])
+    stages = [[True] * 4,                       # trim 2
+              [True, True, True, False],        # trim 4
+              [False, True, False, False]]      # trim 4
+    assert sst.cascading_trim(col, stages) == [2, 4, 4]
+    assert sst.cascading_trim(col, [[False] * 4]) == [-1]
+    with pytest.raises(ValueError, match="only shrink"):
+        sst.cascading_trim(col, [stages[1], stages[0]])
+    # seeded property: staged trims never roll back while survivors
+    # remain (-1 = a stage with NO survivors, the documented total-
+    # failure sentinel the membership service raises on before use)
+    rng = np.random.default_rng(13)
+    for _ in range(50):
+        n = int(rng.integers(2, 7))
+        c = rng.integers(-1, 40, n)
+        alive = rng.random(n) < 0.8
+        st = [alive.copy()]
+        for _ in range(int(rng.integers(1, 4))):
+            alive = alive & (rng.random(n) < 0.7)
+            st.append(alive.copy())
+        trims = sst.cascading_trim(c, st)
+        assert all(b >= a or b == -1
+                   for a, b in zip(trims, trims[1:]))
+
+
+# ---------------------------------------------------------------------------
+# the harness, small (fast tier)
+# ---------------------------------------------------------------------------
+
+
+def _chaos_group():
+    spec_a = api.SubgroupSpec(members=(0, 1, 2, 3), senders=(0, 1, 2),
+                              msg_size=512, window=4, n_messages=0)
+    spec_b = api.SubgroupSpec(members=(1, 2, 3), senders=(1, 2),
+                              msg_size=256, window=4, n_messages=0)
+    return api.Group(api.GroupConfig(members=(0, 1, 2, 3, 4),
+                                     subgroups=(spec_a, spec_b)))
+
+
+@fast
+def test_chaos_soak_stream_smoke():
+    spec = FaultSpec(rounds=16, suspect_rate=0.25, cascade_prob=0.5,
+                     join_rate=0.15, stall_rate=0.1)
+    rep = chaos_soak(_chaos_group(), spec, seed=11, backend="graph")
+    assert isinstance(rep, ChaosReport) and rep.target == "stream"
+    assert rep.views_installed >= 1 and rep.checks > 20
+    assert rep.extras["fault_events"] >= 1
+    # deterministic: the same seed replays to the same report
+    rep2 = chaos_soak(_chaos_group(), spec, seed=11, backend="graph")
+    assert rep.extras == rep2.extras and rep.killed == rep2.killed
+
+
+@fast
+def test_chaos_soak_rejects_unknown_targets():
+    with pytest.raises(TypeError, match="does not know"):
+        chaos_soak(object(), FaultSpec())
+
+
+# ---------------------------------------------------------------------------
+# gradsync through the stream: the elastic resize as a real cut
+# ---------------------------------------------------------------------------
+
+
+def _upd(node, rnd):
+    return {"w": float((node + 1) * rnd) * 0.01}
+
+
+@fast
+def test_gradsync_stream_matches_direct_bucketing_under_join_resize():
+    """With no failures, routing the reduction through a GroupStream
+    changes WHEN updates apply (the delivery watermark) but not WHAT
+    applies: the applied-round means equal the direct per-round means
+    of the same schedule, through an elastic JOIN resize."""
+    members = [0, 1, 2]
+    rt = ElasticRuntime(list(members), ElasticConfig())
+    gs = BucketSyncStream(members, n_buckets=2, window=6,
+                          backend="graph")
+    rt.attach_gradient_stream(gs, _upd)
+    contributed_by_round = {}
+    for _ in range(4):
+        res = rt.step()
+        contributed_by_round[res["round"]] = list(res["contributed"])
+    rt.join(3)
+    for _ in range(5):
+        res = rt.step()
+        contributed_by_round[res["round"]] = list(res["contributed"])
+    assert any(len(c) == 4 for c in contributed_by_round.values()), \
+        "the joiner never became a contributor"
+    rep = rt.gradsync.finish()
+    assert not rep.stalled
+    applied = rt.gradsync.applied
+    assert len(applied) == len(contributed_by_round)
+    rounds = sorted(contributed_by_round)
+    direct_w = 0.0
+    for a, rnd in zip(applied, rounds):
+        assert not a.voided
+        assert sorted(a.contributors) == \
+            sorted(contributed_by_round[rnd])
+        direct = float(np.mean([_upd(m, rnd)["w"]
+                                for m in sorted(a.contributors)]))
+        assert a.update["w"] == pytest.approx(direct, abs=1e-12)
+        direct_w += direct
+    stream_w = sum(a.update["w"] for a in applied)
+    assert stream_w == pytest.approx(direct_w, abs=1e-12)
+    # the resize consumed a view and nobody's watermark rolled back:
+    # every live worker tracks the same stream watermark (finish()'s
+    # drain applies the in-flight tail after the last runtime step)
+    assert len(rt.view_changes) == 1
+    marks = {w.delivered_step for w in rt.workers.values() if w.alive}
+    assert len(marks) == 1 and marks.pop() <= len(applied)
+
+
+@fast
+def test_gradsync_stream_failure_voids_only_dead_no_rollback():
+    members = [0, 1, 2, 3]
+    rt = ElasticRuntime(list(members), ElasticConfig(heartbeat_timeout=2))
+    gs = BucketSyncStream(members, n_buckets=2, window=4,
+                          backend="graph")
+    rt.attach_gradient_stream(gs, _upd)
+    contributed_by_round = {}
+    watermarks = {m: [] for m in members}
+    for rnd in range(10):
+        if rnd == 3:
+            rt.fail(3)
+        res = rt.step()
+        contributed_by_round[res["round"]] = list(res["contributed"])
+        for m, w in rt.workers.items():
+            watermarks[m].append(w.delivered_step)
+    rep = rt.gradsync.finish()
+    assert not rep.stalled
+    assert len(rt.view_changes) == 1
+    assert 3 not in rt.view_changes[0].members
+    # delivered_step is monotone for EVERY worker — the stream cut
+    # replaces the rollback-to-watermark restart
+    for m, seq in watermarks.items():
+        assert all(b >= a for a, b in zip(seq, seq[1:])), (m, seq)
+    applied = rt.gradsync.applied
+    assert len(applied) == len(contributed_by_round)
+    rounds = sorted(contributed_by_round)
+    for a, rnd in zip(applied, rounds):
+        assert set(a.voided) <= {3}
+        assert sorted(set(a.contributors) | set(a.voided)) == \
+            sorted(contributed_by_round[rnd])
+        if a.contributors:
+            direct = float(np.mean([_upd(m, rnd)["w"]
+                                    for m in sorted(a.contributors)]))
+            assert a.update["w"] == pytest.approx(direct, abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# seeded soaks over every plane (-m soak; the CI chaos-soak job)
+# ---------------------------------------------------------------------------
+
+
+@soak
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_stream_soak_graph_pallas_identical(seed):
+    spec = FaultSpec(rounds=24, suspect_rate=0.25, cascade_prob=0.5,
+                     join_rate=0.15, stall_rate=0.15)
+    reps = {be: chaos_soak(_chaos_group(), spec, seed=seed, backend=be)
+            for be in ("graph", "pallas")}
+    g, p = reps["graph"], reps["pallas"]
+    assert g.views_installed == p.views_installed >= 1
+    assert g.killed == p.killed and g.joined == p.joined
+    assert g.extras == p.extras
+    assert g.checks == p.checks > 30
+
+
+@soak
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_gradsync_soak_graph_pallas_identical(seed):
+    spec = FaultSpec(rounds=20, suspect_rate=0.2, cascade_prob=0.5,
+                     join_rate=0.2, stall_rate=0.1)
+    reps = {}
+    for be in ("graph", "pallas"):
+        gs = BucketSyncStream([0, 1, 2, 3], n_buckets=2, window=6,
+                              backend=be)
+        reps[be] = chaos_soak(gs, spec, seed=seed)
+    g, p = reps["graph"], reps["pallas"]
+    assert g.extras == p.extras
+    assert g.killed == p.killed and g.views_installed == p.views_installed
+    assert g.extras["applied"], "the soak applied no optimizer rounds"
+
+
+@soak
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_serve_soak_graph_pallas_identical(seed):
+    from test_viewchange import _fan_engines
+    from repro.serve.engine import Request
+    from repro.serve.fanout import ReplicatedEngine
+
+    engines, mcfg = _fan_engines()
+    spec = FaultSpec(rounds=14, suspect_rate=0.2, cascade_prob=0.5,
+                     slot_kill_rate=0.2, stall_rate=0.1)
+    reps = {}
+    for be in ("graph", "pallas"):
+        rep_eng = ReplicatedEngine(engines, subscribers_per_replica=2,
+                                   window=4, backend=be)
+        rep_eng.reset()
+        rng = np.random.default_rng(3)
+        for g in range(2):
+            for i in range(3):
+                rep_eng.submit(g, Request(
+                    rid=g * 10 + i,
+                    prompt=rng.integers(0, mcfg.vocab_size, 3,
+                                        dtype=np.int32),
+                    max_new_tokens=4))
+        reps[be] = chaos_soak(rep_eng, spec, seed=seed)
+    g, p = reps["graph"], reps["pallas"]
+    assert g.extras == p.extras
+    assert g.killed == p.killed
+    assert g.views_installed == p.views_installed
+    assert g.rounds == p.rounds

@@ -535,3 +535,249 @@ def test_replicated_engine_survives_subscriber_failure_midrun():
             per_slot[rank] += 1
     # replica 0 served 3 requests x (1 admission + 4 tokens) app msgs
     assert int(per_slot.sum()) == 3 * 5
+
+
+# ---------------------------------------------------------------------------
+# serve plane: slot-node failure + cascading waves (DESIGN.md Secs. 7, 9)
+# ---------------------------------------------------------------------------
+
+
+def test_replicated_engine_survives_slot_node_failure_with_cascade():
+    """A SLOT (publisher) node dies mid-run, and a second suspicion wave
+    lands while the wedge is in progress: exactly ONE view installs for
+    the cascade (wedge re-entered once, one vid consumed), the dead
+    slot's in-flight decode is voided and re-admitted at the queue head
+    to restart from its prompt on a surviving slot, surviving slots
+    compact onto the shrunken sender ranks, and every request still
+    completes — bit-identical graph vs pallas (tokens, epoch logs,
+    slot-failure records)."""
+    from repro.serve.engine import Request
+    from repro.serve.fanout import ReplicatedEngine
+
+    engines, mcfg = _fan_engines()
+    results = {}
+    for backend in ("graph", "pallas"):
+        rep = ReplicatedEngine(engines, subscribers_per_replica=2,
+                               window=4, backend=backend)
+        rep.reset()
+        rng = np.random.default_rng(3)
+        for g in range(2):
+            for i in range(3):
+                rep.submit(g, Request(
+                    rid=g * 10 + i,
+                    prompt=rng.integers(0, mcfg.vocab_size, 3,
+                                        dtype=np.int32),
+                    max_new_tokens=4))
+        # nodes: replica 0 = slots {0,1} + subs {2,3}; replica 1 =
+        # slots {4,5} + subs {6,7}.  Wave 1 kills slot node 0 and
+        # subscriber 3; wave 2 (mid-wedge) kills subscriber 6.
+        report = rep.run(fail_at={2: [[0, 3], [6]]})
+        serve = report.extras["serve"]
+        assert serve["view_changes"] == 1, "cascade must fold into ONE view"
+        assert rep._ms.wedge_retries == 1
+        assert rep.view_log[0][1].vid == 1
+        assert serve["drained"] and serve["requests"] == 6
+        assert serve["tokens"] == 6 * 4
+        assert serve["held_slots"] == 0
+        assert serve["slot_failures"] == 1
+        assert serve["fail_at_unreached"] == []
+        [rec] = serve["slot_failure_log"]
+        assert (rec["replica"], rec["slot"], rec["node"]) == (0, 0, 0)
+        assert rec["lost_apps"] >= 0
+        # the voided decode restarted from its prompt and completed
+        if rec["voided_rid"] is not None:
+            assert rec["requeued"]
+            assert rec["voided_rid"] in {
+                r.rid for r in rep.engines[0].completed}
+        # survivors compacted: slot 1 now publishes on rank 0
+        assert rep._rank_slot[0] == [1]
+        assert rep._slot_rank[0] == {1: 0}
+        results[backend] = (rep.completed(), rep.view_log,
+                            report.extras["delivery_logs"],
+                            list(rep.slot_failures))
+    (tok_g, views_g, logs_g, sf_g) = results["graph"]
+    (tok_p, views_p, logs_p, sf_p) = results["pallas"]
+    assert tok_g == tok_p and sf_g == sf_p
+    for (rn_g, v_g, _, old_g), (rn_p, v_p, _, old_p) in zip(views_g,
+                                                            views_p):
+        assert rn_g == rn_p and v_g == v_p
+        for name in old_g:
+            assert old_g[name].delivered_seq == old_p[name].delivered_seq
+    for name in logs_g:
+        assert logs_g[name].delivered_seq == logs_p[name].delivered_seq
+    # exactly-once at replica 0's surviving subscriber (node 2): the
+    # dead slot's stable prefix + the surviving slot's apps across both
+    # epochs + the voided request's re-decode = all 3 requests' messages
+    _, _, old_report, old_logs = views_g[0]
+    stable0 = old_report.extras["view_change"][
+        "stable_apps_by_old_rank"][0]
+    per_epoch = [sum(1 for _ in log.sequence(2))
+                 for log in (old_logs["replica-0"], logs_g["replica-0"])]
+    assert per_epoch[0] == int(np.asarray(stable0).sum())
+    # the voided request re-publishes its FULL message set (1 admission
+    # + 4 tokens) on a surviving slot while the dead slot's stable
+    # prefix stays delivered; its unstable tail died with the slot:
+    # total = failure-free total + the dead slot's stable prefix
+    assert sf_g[0]["voided_rid"] is not None
+    assert sum(per_epoch) == 3 * 5 + sf_g[0]["stable_apps"]
+    # the failure record's stable count IS the closing report's
+    # per-old-rank stable prefix for the dead slot (old rank 0)
+    assert sf_g[0]["stable_apps"] == int(stable0[0])
+
+
+def test_fail_at_unreached_rounds_surface_in_extras():
+    """A fail_at round the run never reaches (the engines drained
+    first) is NOT an error: it surfaces in
+    extras['serve']['fail_at_unreached'] so a sampled chaos schedule
+    can overshoot the drain without tripping the run."""
+    from repro.serve.engine import Request
+    from repro.serve.fanout import ReplicatedEngine
+
+    engines, mcfg = _fan_engines()
+    rep = ReplicatedEngine(engines, subscribers_per_replica=1,
+                           window=4, backend="graph")
+    rep.reset()
+    rng = np.random.default_rng(5)
+    for g in range(2):
+        rep.submit(g, Request(
+            rid=g, prompt=rng.integers(0, mcfg.vocab_size, 3,
+                                       dtype=np.int32),
+            max_new_tokens=3))
+    report = rep.run(fail_at={500: [2], 900: [[5], [2]]})
+    serve = report.extras["serve"]
+    assert serve["drained"] and serve["view_changes"] == 0
+    assert serve["fail_at_unreached"] == [500, 900]
+    # reached rounds still fail for real: mixed with one live cut
+    rep.reset()
+    for g in range(2):
+        rep.submit(g, Request(
+            rid=10 + g, prompt=rng.integers(0, mcfg.vocab_size, 3,
+                                            dtype=np.int32),
+            max_new_tokens=3))
+    report = rep.run(fail_at={1: [2], 700: [5]})
+    serve = report.extras["serve"]
+    assert serve["drained"] and serve["view_changes"] == 1
+    assert serve["fail_at_unreached"] == [700]
+
+
+# ---------------------------------------------------------------------------
+# carry of a carry: consecutive cuts, zero intervening rounds
+# ---------------------------------------------------------------------------
+
+
+@fast
+@pytest.mark.parametrize("backend", ["graph", "pallas"])
+def test_carry_of_a_carry_consecutive_cuts_zero_rounds(backend):
+    """Two cuts with ZERO rounds between them: the second epoch opens
+    and closes without a single sweep, so its trim is the -1 floor
+    (received_num inits to -1), nothing new goes stable, the first
+    carry's resend set is carried VERBATIM into the third epoch
+    (merged, per-sender FIFO intact), and app_base stays put — then the
+    third epoch drains everything exactly once, des-conformant."""
+    spec = api.SubgroupSpec(members=(0, 1, 2, 3), senders=(0, 1, 2),
+                            msg_size=512, window=4, n_messages=0)
+    g0 = api.Group(api.GroupConfig(members=(0, 1, 2, 3, 4, 5),
+                                   subgroups=(spec,)))
+    ms = api.MembershipService(g0.cfg.members)
+    stream = g0.stream(backend=backend)
+    rng = np.random.default_rng(17)
+    enq = np.zeros(3, np.int64)
+    for _ in range(4):
+        ready = np.zeros(stream.shape, np.int32)
+        ready[0, :3] = rng.integers(0, 3, 3)
+        enq += ready[0, :3]
+        stream.step(ready)
+    # cut 1: node 4 (outside the subgroup) fails -> epoch rolls, no
+    # re-shape; some messages stable, the rest become resend backlog
+    ms.suspect(0, 4)
+    old1 = stream.group
+    _, stream = ms.reconfigure_stream(stream, {})
+    c1 = stream.carry
+    assert c1 is not None
+    base1 = c1.app_base[0].copy()
+    resend1 = c1.resend[0].copy()
+    np.testing.assert_array_equal(base1 + resend1, enq)
+    # cut 2 IMMEDIATELY: zero intervening rounds.  Nothing could go
+    # stable, so the second carry must merge the first verbatim.
+    ms.suspect(0, 5)
+    old2 = stream.group
+    _, stream = ms.reconfigure_stream(stream, {})
+    c2 = stream.carry
+    # a zero-round epoch trims to the -1 floor (received_num inits to
+    # -1): zero stable apps, and the cut logs nothing
+    assert old2.last_report.extras["view_change"]["cut_seq"][0] == -1
+    np.testing.assert_array_equal(c2.stable_apps[0],
+                                  np.zeros(3, np.int64))
+    np.testing.assert_array_equal(c2.resend[0], resend1)
+    np.testing.assert_array_equal(c2.app_base[0], base1)  # monotone, flat
+    # the zero-round epoch delivered nothing, everywhere ({} = an epoch
+    # with no rounds has no logs at all)
+    log2 = old2.delivery_logs.get(0)
+    for node in (0, 1, 2, 3):
+        assert (log2.sequence(node) if log2 else []) == []
+    # third epoch: drain.  Every enqueued message lands exactly once
+    # at every member, FIFO per sender, and the total delivered across
+    # the three epochs is the total enqueued.
+    report, logs = stream.finish()
+    assert not report.stalled
+    for node in (0, 1, 2, 3):
+        per = np.zeros(3, np.int64)
+        for ep_logs in (old1.delivery_logs[0], logs[0]):
+            last = {}                  # publish idx restarts per epoch
+            for rank, idx, _ in ep_logs.sequence(node):
+                assert idx > last.get(rank, -1), "per-sender FIFO broke"
+                last[rank] = idx
+                per[rank] += 1
+        np.testing.assert_array_equal(per, enq, err_msg=f"node {node}")
+    # des conformance of the final epoch's resend (order-invariant)
+    g_des = api.Group(stream.group.cfg)
+    for rank in range(3):
+        g_des.subgroup(0).send(sender=spec.senders[rank],
+                               n=int(stream._enqueued[0][rank]))
+    g_des.run(backend="des")
+    assert _sender_apps(logs[0], 0, spec) == \
+        _sender_apps(g_des.delivery_logs[0], 0, spec)
+
+
+@fast
+def test_carry_of_a_carry_des_roundtrip_conformance():
+    """The des leg of satellite coverage: the same double-cut traffic
+    run as ONE des schedule delivers the same per-sender app counts the
+    stacked stream delivered across its three epochs."""
+    spec = api.SubgroupSpec(members=(0, 1, 2, 3), senders=(0, 1, 2),
+                            msg_size=512, window=4, n_messages=0)
+    totals = {}
+    for backend in ("graph", "pallas"):
+        g0 = api.Group(api.GroupConfig(members=(0, 1, 2, 3, 4, 5),
+                                       subgroups=(spec,)))
+        ms = api.MembershipService(g0.cfg.members)
+        stream = g0.stream(backend=backend)
+        rng = np.random.default_rng(29)
+        enq = np.zeros(3, np.int64)
+        epochs = []
+        for cut in range(2):
+            for _ in range(3):
+                ready = np.zeros(stream.shape, np.int32)
+                ready[0, :3] = rng.integers(0, 3, 3)
+                enq += ready[0, :3]
+                stream.step(ready)
+            ms.suspect(0, 4 + cut)
+            epochs.append(stream.group)
+            _, stream = ms.reconfigure_stream(stream, {})
+        report, logs = stream.finish()
+        assert not report.stalled
+        per = {}
+        for ep_logs in [e.delivery_logs[0] for e in epochs] + [logs[0]]:
+            for node_id, c in _sender_apps(ep_logs, 1, spec).items():
+                per[node_id] = per.get(node_id, 0) + c
+        totals[backend] = per
+        assert sum(per.values()) == int(enq.sum())
+    assert totals["graph"] == totals["pallas"]
+    g_des = api.Group(api.GroupConfig(members=(0, 1, 2, 3),
+                                      subgroups=(spec,)))
+    for rank, node in enumerate(spec.senders):
+        g_des.subgroup(0).send(sender=node, n=totals["graph"].get(
+            node, 0))
+    g_des.run(backend="des")
+    assert _sender_apps(g_des.delivery_logs[0], 1, spec) == \
+        totals["graph"]
