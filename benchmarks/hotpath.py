@@ -24,6 +24,20 @@ are simulated-time):
   runs) is the steady-state serve+multicast cost, with ``tok_per_s_warm``
   the wall-clock token rate and ``one_program`` asserting the whole run
   appended a single TRACE_EVENTS entry.
+* ``serve_fused``   — the SAME serve workload as ``serve_fanout`` run as
+  ONE device-resident program (repro.serve.fused): admission, decode,
+  token emission, multicast publish, watermark-gated slot reuse and the
+  settle drain all inside one ``lax.while_loop`` — ``host_hops`` must be
+  0 (the unfused loop pays one logits readback per decode round plus one
+  watermark view per push round) and a warm run must re-trace nothing.
+* ``fused_saturation`` — the fused program scaled over replicas x slots
+  at fixed per-slot work until wall-clock throughput saturates; the
+  curve is the capacity story of the device-resident serve plane.
+* ``compile_cache``  — cold-start with and without the JAX persistent
+  compilation cache (``REPRO_COMPILATION_CACHE``): three fresh
+  subprocesses (cache off / cache populate / cache warm) each timing the
+  same cold fused serve run; the delta is what a restarted serving
+  process saves when the executable deserializes instead of recompiling.
 * ``view_change``   — warm reconfigure-under-traffic: the
   virtual-synchrony cut of a live stream (wedge + ragged trim + epoch
   carry + new-stream hand-off, DESIGN.md Sec. 7) with the padded stack
@@ -68,6 +82,9 @@ PRE_PR = {
     "pallas_second_run_s": 0.718,
     "per_round_us_graph_second_run": 2543.2,
     "sequential_8_window_grid_s": 4.228,
+    # the committed FULL serve_fanout row at the parent commit (per-round
+    # dispatch loop, PR 7 baseline) — the fused serve plane's 5x target
+    "serve_fanout_tok_per_s_warm": 487.6,
 }
 
 FULL = dict(n=8, senders=4, msgs=150, window=32)
@@ -283,6 +300,165 @@ def bench_serve_fanout(shape, backend="graph"):
     }
 
 
+def _fill_serve(rep, shape, cfg):
+    rep.reset()
+    rng = np.random.default_rng(0)
+    for g in range(shape["replicas"]):
+        for i in range(shape["reqs"]):
+            from repro.serve.engine import Request
+            rep.submit(g, Request(
+                rid=g * 100 + i,
+                prompt=rng.integers(0, cfg.vocab_size, shape["prompt"],
+                                    dtype=np.int32),
+                max_new_tokens=shape["new_tokens"]))
+
+
+def bench_serve_fused(shape, backend="graph"):
+    """The serve_fanout workload as ONE device-resident program: decode
+    inside the scan body, zero host hops between rounds.  ``cold_s``
+    includes tracing+compiling the fused while_loop; warm runs must hit
+    the cached program (``warm_trace_events`` == 0) and report
+    ``host_hops`` == 0 — the fused contract the CI smoke gate holds."""
+    from repro.core.group import TRACE_EVENTS
+    from repro.serve.fanout import ReplicatedEngine
+
+    engines, cfg = _serve_engines(shape)
+    rep = ReplicatedEngine(engines, subscribers_per_replica=2, window=4,
+                           backend=backend)
+
+    def run_once():
+        _fill_serve(rep, shape, cfg)
+        t0 = time.perf_counter()
+        report = rep.run(fused=True)
+        return time.perf_counter() - t0, report
+
+    cold, report = run_once()
+    n0 = len(TRACE_EVENTS)
+    warm, tok_s = float("inf"), 0.0
+    for _ in range(5):
+        w, report = run_once()
+        if w < warm:
+            warm, tok_s = w, report.extras["serve"]["tokens"] / w
+    serve = report.extras["serve"]
+    return {
+        "replicas": shape["replicas"],
+        "slots": shape["slots"],
+        "cold_s": round(cold, 4),
+        "warm_s": round(warm, 4),
+        "tok_per_s_warm": round(tok_s, 1),
+        "tokens": serve["tokens"],
+        "fused": bool(serve["fused"]),
+        "fused_fallback": serve.get("fused_fallback"),
+        "host_hops": serve["host_hops"],
+        "engine_rounds": serve["engine_rounds"],
+        "fused_rounds": serve.get("fused_rounds"),
+        "warm_trace_events": len(TRACE_EVENTS) - n0,
+    }
+
+
+# fused saturation ladder: replicas x slots at fixed per-slot work
+# (reqs = 2*slots keeps every point reusing each slot once)
+SATURATION_LADDER = ((1, 2), (1, 4), (1, 8), (2, 4), (2, 8), (2, 16))
+
+
+def bench_fused_saturation(ladder=SATURATION_LADDER):
+    """Scale the fused program over replicas x slots until wall-clock
+    throughput saturates.  Each point is a fresh compile (shape-static
+    program) — ``cold_s`` is reported but the curve is ``tok_per_s_warm``
+    over total slots."""
+    from repro.serve.fanout import ReplicatedEngine
+
+    curve = []
+    for replicas, slots in ladder:
+        shape = dict(replicas=replicas, slots=slots, reqs=2 * slots,
+                     prompt=4, new_tokens=6)
+        engines, cfg = _serve_engines(shape)
+        rep = ReplicatedEngine(engines, subscribers_per_replica=2,
+                               window=4)
+
+        def run_once():
+            _fill_serve(rep, shape, cfg)
+            t0 = time.perf_counter()
+            report = rep.run(fused=True)
+            return time.perf_counter() - t0, report
+
+        cold, _ = run_once()
+        warm, report = float("inf"), None
+        for _ in range(3):
+            w, r = run_once()
+            if w < warm:
+                warm, report = w, r
+        serve = report.extras["serve"]
+        curve.append({
+            "replicas": replicas,
+            "slots": slots,
+            "total_slots": replicas * slots,
+            "tokens": serve["tokens"],
+            "cold_s": round(cold, 4),
+            "warm_s": round(warm, 4),
+            "tok_per_s_warm": round(serve["tokens"] / warm, 1),
+            "fused": bool(serve["fused"]),
+        })
+    peak = max(p["tok_per_s_warm"] for p in curve)
+    return {
+        "curve": curve,
+        "peak_tok_per_s": peak,
+        # saturated when the last doubling bought < 15% more throughput
+        "saturated": bool(curve[-1]["tok_per_s_warm"] < 1.15
+                          * curve[-2]["tok_per_s_warm"]),
+    }
+
+
+def bench_compile_cache(shape):
+    """Cold-start delta from the JAX persistent compilation cache: three
+    fresh subprocesses time the SAME cold fused serve run — cache off,
+    cache populate (cold disk), cache warm (deserialize instead of
+    recompile).  The probe is this script's own ``--cold-probe`` mode so
+    the child measures exactly one process-cold fused run."""
+    import os
+    import subprocess
+    import tempfile
+
+    def probe(extra_env):
+        env = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+        env.pop("REPRO_COMPILATION_CACHE", None)
+        env.update(extra_env)
+        out = subprocess.run(
+            [sys.executable, str(Path(__file__).resolve()),
+             "--cold-probe"],
+            env=env, capture_output=True, text=True, check=True)
+        return json.loads(out.stdout.strip().splitlines()[-1])
+
+    with tempfile.TemporaryDirectory() as cache_dir:
+        off = probe({})
+        populate = probe({"REPRO_COMPILATION_CACHE": cache_dir})
+        warm = probe({"REPRO_COMPILATION_CACHE": cache_dir})
+    return {
+        "cold_run_s_no_cache": off["cold_run_s"],
+        "cold_run_s_cache_populate": populate["cold_run_s"],
+        "cold_run_s_cache_warm": warm["cold_run_s"],
+        "cold_start_delta_s": round(
+            off["cold_run_s"] - warm["cold_run_s"], 4),
+        "speedup_cold_start": round(
+            off["cold_run_s"] / max(warm["cold_run_s"], 1e-9), 2),
+    }
+
+
+def cold_probe(shape) -> dict:
+    """Child-process body of ``bench_compile_cache``: one process-cold
+    fused serve run, wall-clocked from engine build to report."""
+    from repro.serve.fanout import ReplicatedEngine
+
+    engines, cfg = _serve_engines(shape)
+    rep = ReplicatedEngine(engines, subscribers_per_replica=2, window=4)
+    _fill_serve(rep, shape, cfg)
+    t0 = time.perf_counter()
+    report = rep.run(fused=True)
+    dt = time.perf_counter() - t0
+    return {"cold_run_s": round(dt, 4),
+            "fused": bool(report.extras["serve"]["fused"])}
+
+
 def bench_view_change(shape, backend="graph"):
     """Warm reconfigure-under-traffic: the virtual-synchrony cut of a
     LIVE stream (wedge at the SST watermarks, ragged trim, epoch carry,
@@ -397,6 +573,7 @@ def run_suite(shape, grid, topics, serve, vc, slotkill):
         "window_grid_graph": bench_window_grid(shape, grid, "graph"),
         "many_topics_graph": bench_many_topics(topics, "graph"),
         "serve_fanout": bench_serve_fanout(serve, "graph"),
+        "serve_fused": bench_serve_fused(serve, "graph"),
         "view_change": bench_view_change(vc, "graph"),
         "slot_failure": bench_slot_failure(slotkill, "graph"),
     }
@@ -416,6 +593,7 @@ def smoke_gate(baseline_path: Path) -> int:
                           ("window_grid_graph", "batch_s"),
                           ("many_topics_graph", "stacked_warm_s"),
                           ("serve_fanout", "warm_s"),
+                          ("serve_fused", "warm_s"),
                           ("view_change", "reconfigure_s"),
                           ("slot_failure", "cut_s")):
         cur = results[bench][metric]
@@ -435,6 +613,29 @@ def smoke_gate(baseline_path: Path) -> int:
     if not results["serve_fanout"]["one_program"]:
         print("serve_fanout: a run compiled more than one stacked program")
         failures.append("serve_fanout.one_program")
+    sf = results["serve_fused"]
+    if not sf["fused"]:
+        print(f"serve_fused: fell back to the per-round loop "
+              f"({sf['fused_fallback']})")
+        failures.append("serve_fused.fused")
+    if sf["host_hops"] != 0:
+        print(f"serve_fused: {sf['host_hops']} host hops in a fused run "
+              "(the device-resident contract is zero)")
+        failures.append("serve_fused.host_hops")
+    if sf["warm_trace_events"] > 1:
+        print(f"serve_fused: warm runs appended "
+              f"{sf['warm_trace_events']} TRACE_EVENTS entries "
+              "(re-tracing per run)")
+        failures.append("serve_fused.warm_trace_events")
+    # relative throughput floor: fused must beat the per-round loop on
+    # the SAME box and shape (absolute floors live in the full run's
+    # acceptance, where the machine matches the committed baseline)
+    if sf["tok_per_s_warm"] < 1.2 * results["serve_fanout"][
+            "tok_per_s_warm"]:
+        print(f"serve_fused: {sf['tok_per_s_warm']} tok/s is under 1.2x "
+              f"the unfused loop "
+              f"({results['serve_fanout']['tok_per_s_warm']} tok/s)")
+        failures.append("serve_fused.tok_per_s_warm")
     if not results["view_change"]["reused_program"]:
         print("view_change: a shape-preserving cut re-traced the stream "
               "program (fresh-epoch restart regression)")
@@ -459,7 +660,12 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes; fail on >3x regression vs baseline")
     ap.add_argument("--json", type=Path, default=BENCH_PATH)
+    ap.add_argument("--cold-probe", action="store_true",
+                    help=argparse.SUPPRESS)   # bench_compile_cache child
     args = ap.parse_args()
+    if args.cold_probe:
+        print(json.dumps(cold_probe(SMOKE_SERVE)))
+        return 0
     if args.smoke:
         return smoke_gate(args.json)
     record = {
@@ -477,9 +683,13 @@ def main() -> int:
                                "topics": dict(SMOKE_TOPICS),
                                "serve": dict(SMOKE_SERVE),
                                "view_change": dict(SMOKE_VC),
-                               "slot_failure": dict(SMOKE_SLOTKILL)}},
+                               "slot_failure": dict(SMOKE_SLOTKILL)},
+                     "fused_saturation": [list(p) for p in
+                                          SATURATION_LADDER]},
     }
     full = record["full"]
+    record["fused_saturation"] = bench_fused_saturation()
+    record["compile_cache"] = bench_compile_cache(SMOKE_SERVE)
     full["vs_pre_pr"] = {
         "graph_second_run_speedup": round(
             PRE_PR["graph_second_run_s"]
@@ -490,10 +700,14 @@ def main() -> int:
         "window_grid_speedup_vs_pre_pr_sequential": round(
             PRE_PR["sequential_8_window_grid_s"]
             / full["window_grid_graph"]["batch_s"], 1),
+        "serve_fused_speedup_vs_pre_pr_serve_row": round(
+            full["serve_fused"]["tok_per_s_warm"]
+            / PRE_PR["serve_fanout_tok_per_s_warm"], 1),
     }
     args.json.write_text(json.dumps(record, indent=1) + "\n")
     print(json.dumps(record, indent=1))
     print(f"-> {args.json}")
+    sat = record["fused_saturation"]
     ok = (full["repeated_run_graph"]["speedup_cold_over_warm"] >= 10
           and full["vs_pre_pr"]["graph_second_run_speedup"] >= 10
           and full["window_grid_graph"]["speedup_batch"] > 1
@@ -502,6 +716,17 @@ def main() -> int:
           and full["many_topics_graph"]["logs_identical"]
           and full["serve_fanout"]["one_program"]
           and full["serve_fanout"]["tok_per_s_warm"] > 0
+          and full["serve_fused"]["fused"]
+          and full["serve_fused"]["host_hops"] == 0
+          and full["serve_fused"]["warm_trace_events"] <= 1
+          # the tentpole: >= 5x the committed per-round serve row at the
+          # matched FULL_SERVE shape
+          and full["vs_pre_pr"][
+              "serve_fused_speedup_vs_pre_pr_serve_row"] >= 5.0
+          and all(p["fused"] for p in sat["curve"])
+          and sat["peak_tok_per_s"] >= full["serve_fused"][
+              "tok_per_s_warm"]
+          and record["compile_cache"]["cold_start_delta_s"] > 0
           and full["view_change"]["reused_program"]
           and full["view_change"]["resend_msgs"] > 0
           and full["slot_failure"]["reused_program"]

@@ -1,2 +1,35 @@
 """repro — Spindle (RDMA atomic multicast optimizations) as a multi-pod
 JAX training/serving framework.  See README.md and DESIGN.md."""
+
+import os as _os
+
+
+def enable_compilation_cache(path: str) -> None:
+    """Point JAX's persistent compilation cache at ``path``.
+
+    Every compile-once program in the repo (the stacked scan/stream
+    programs, the fused serve program, jitted decode steps) is re-traced
+    per PROCESS; across processes the trace is cheap but the XLA compile
+    is not.  With the cache on, a cold process deserializes previously
+    compiled executables from disk instead of recompiling — the
+    cold-start delta is measured by ``benchmarks/hotpath.py``
+    (``compile_cache`` row in BENCH_hotpath.json).
+
+    Zero thresholds so even the sub-second CPU compiles of the test
+    shapes are cached — the default thresholds only persist compiles
+    over a second, which on the benchmark shapes would cache nothing.
+    """
+    import jax
+
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+
+
+# Opt-in via environment so every entry point (pytest, benchmarks,
+# subprocesses) inherits it without code changes: REPRO_COMPILATION_CACHE
+# names the cache directory; unset/empty leaves JAX's default (off).
+_cache_dir = _os.environ.get("REPRO_COMPILATION_CACHE")
+if _cache_dir:
+    enable_compilation_cache(_cache_dir)
+del _os, _cache_dir

@@ -272,6 +272,42 @@ def scan_rounds(state: SweepState, app_schedule: Array, *,
     return state, traces
 
 
+def quiescent_stacked(states: SweepState, backlogs: Array,
+                      n_members=None, n_senders=None) -> Array:
+    """In-graph quiescence over a stacked (G-leading) state: no backlog
+    anywhere and every PUBLISHED message delivered by every real member
+    — the same strict test :meth:`repro.core.group.GroupStream.quiescent`
+    applies host-side (delivered >= every sender's last published seq,
+    not merely the rr prefix; see that method for why the prefix test
+    strands window-throttled tails).  This is the loop-exit predicate of
+    device-resident drains (the fused serve program scans rounds until
+    this holds, with zero host round-trips — DESIGN.md Sec. 6).
+
+    ``n_members``/``n_senders`` optionally mask padded lanes ((G,) int
+    real counts); ``None`` means the stack is homogeneous/unpadded.
+    Returns a scalar bool array.
+    """
+    g, n_max = states.delivered_num.shape
+    s_max = states.published.shape[1]
+    ranks = jnp.arange(s_max)
+    pub = states.published                              # (G, S)
+    sender_valid = pub > 0
+    backlog_ok = jnp.asarray(backlogs) == 0
+    if n_senders is not None:
+        lane = ranks[None, :] < jnp.asarray(n_senders)[:, None]
+        sender_valid = sender_valid & lane
+        backlog_ok = backlog_ok | ~lane
+    last_seq = (pub - 1) * (jnp.asarray(n_senders)[:, None]
+                            if n_senders is not None else s_max) \
+        + ranks[None, :]
+    need = jnp.max(jnp.where(sender_valid, last_seq, -1), axis=1)  # (G,)
+    deliv = states.delivered_num                        # (G, N)
+    if n_members is not None:
+        rows = jnp.arange(n_max)[None, :] < jnp.asarray(n_members)[:, None]
+        deliv = jnp.where(rows, deliv, jnp.iinfo(jnp.int32).max)
+    return jnp.all(backlog_ok) & jnp.all(deliv >= need[:, None])
+
+
 def batch_states(n_members: int, n_senders: int, batch: int) -> SweepState:
     """A fresh SweepState broadcast over a leading (B,) axis — the carry
     layout :func:`run_stacked` expects over its subgroup axis (and, with a

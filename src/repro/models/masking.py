@@ -1,0 +1,87 @@
+"""Validity-masked decode-state updates (DESIGN.md Sec. 6).
+
+The serve plane's slot ring decodes every slot of the batch each round,
+active or not: an idle/stalled slot still flows through the decode step
+so the round stays one fused program.  For position-addressed state (KV
+caches) the idle slot's garbage write lands at its own next position and
+is overwritten before any read — harmless.  Recurrent families
+(ssm/hybrid) mutate state *cumulatively* every step, so the same trick
+corrupts them; what they need is the null-round idea of
+:mod:`repro.core.gradsync` applied to decode: an invalid slot's state
+update is a masked no-op, its old rows carried through bit-unchanged.
+
+:func:`masked_update` implements that generically over any family's
+cache pytree: each :class:`~repro.models.layers.ParamSpec` leaf names
+its logical axes, so the per-slot validity vector is broadcast along the
+leaf's ``"batch"`` axis wherever it sits (axis 1 for dense/ssm/encdec
+leaves, axis 2 for the hybrid family's per-super-block state).  Applied
+uniformly it also makes the KV write-then-overwrite dance explicit and
+unnecessary — the masked form is what the fused serve program
+(:mod:`repro.serve.fused`) scans, and it is bit-identical to the
+unmasked engine loop for KV families by the overwrite argument above.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+
+PyTree = Any
+
+
+def batch_axis(spec: ParamSpec) -> int:
+    """Index of the ``"batch"`` axis in a cache leaf's logical axes."""
+    if "batch" not in spec.axes:
+        raise ValueError(f"cache leaf has no batch axis: {spec.axes}")
+    return spec.axes.index("batch")
+
+
+def reset_rows(specs: PyTree, cache: PyTree, valid) -> PyTree:
+    """Zero the cache rows of slots where ``valid`` — the admission
+    reset.
+
+    A freed slot's KV rows are harmlessly stale (position-overwritten by
+    the next request's prefill before any read), but recurrent state is
+    CUMULATIVE: without this reset a reused slot would prefill on top of
+    the previous request's final ssm/conv state.  Applied uniformly at
+    admission — KV families are output-unchanged by the overwrite
+    argument, recurrent families become correct — in both the per-round
+    engine (:meth:`repro.serve.engine.ServeEngine._prefill_slot`) and
+    the fused serve program, so the two paths stay bit-identical."""
+    valid = jnp.asarray(valid, bool)
+
+    def leaf(spec, o):
+        ax = batch_axis(spec)
+        shape = [1] * o.ndim
+        shape[ax] = valid.shape[0]
+        return jnp.where(valid.reshape(shape), jnp.zeros_like(o), o)
+
+    return jax.tree.map(leaf, specs, cache,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def masked_update(specs: PyTree, old: PyTree, new: PyTree,
+                  valid) -> PyTree:
+    """``where(valid, new, old)`` per cache leaf, ``valid`` broadcast
+    along each leaf's batch axis.
+
+    ``specs`` is the :func:`repro.models.registry.cache_specs` pytree
+    describing ``old``/``new`` (same treedef); ``valid`` is a ``(B,)``
+    bool vector — slot ``b``'s state advances only where
+    ``valid[b]``.  Invalid slots keep their old rows bit-for-bit (the
+    null-round no-op), which is what lets recurrent decode state ride
+    the slot ring."""
+    valid = jnp.asarray(valid, bool)
+
+    def leaf(spec, o, n):
+        ax = batch_axis(spec)
+        shape = [1] * n.ndim
+        shape[ax] = valid.shape[0]
+        return jnp.where(valid.reshape(shape), n, o)
+
+    return jax.tree.map(leaf, specs, old, new,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))

@@ -16,12 +16,16 @@ Single-host reference implementation; the decode step itself is the same
 ``make_serve_step`` the multi-pod dry-run lowers, so the engine scales to
 the production mesh by construction.
 
-Scope note: the slot ring assumes position-addressed decode state (KV
-caches — dense/moe/vlm/encdec families), where an idle slot's garbage
-write is harmlessly overwritten at its own position.  Recurrent families
-(ssm/hybrid) mutate state on every step and would need a validity-masked
-state update (the null-round mask of repro.core.gradsync, applied to
-decode) — explicitly deferred in DESIGN.md Sec. 11 (future work).
+Every decode step is validity-masked (:mod:`repro.models.masking`): a
+slot that is idle, stalled, or merely a bystander to another slot's
+prefill carries its decode state through bit-unchanged instead of taking
+a garbage write.  For position-addressed state (KV caches) that is
+output-equivalent to the old write-then-overwrite dance; for recurrent
+families (ssm/hybrid), whose state mutates cumulatively every step, it
+is the unlock — every registry family now serves through the same slot
+ring (DESIGN.md Sec. 6).  The masked step is also exactly the round
+body the fused device-resident serve plane scans
+(:mod:`repro.serve.fused`).
 """
 
 from __future__ import annotations
@@ -35,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import layers, registry
+from repro.models import layers, masking, registry
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.models.runtime import Runtime
 
@@ -87,14 +91,34 @@ class ServeEngine:
         self.params = params
         b, s = ecfg.max_batch, ecfg.max_len
         shape = ShapeConfig("engine", s, b, "decode")
-        cache_specs = registry.cache_specs(cfg, shape, batch_override=b)
+        self.cache_specs = registry.cache_specs(cfg, shape,
+                                                batch_override=b)
         self.cache = jax.tree.map(
-            lambda sp: jnp.zeros(sp.shape, sp.dtype), cache_specs,
+            lambda sp: jnp.zeros(sp.shape, sp.dtype), self.cache_specs,
             is_leaf=lambda x: isinstance(x, layers.ParamSpec))
-        self.decode = jax.jit(
-            lambda p, c, t, pos: self.arch.decode_fn()(p, cfg, c, t, pos,
-                                                       rt),
-            donate_argnums=(1,))
+        decode_fn, specs = self.arch.decode_fn(), self.cache_specs
+
+        def _decode_body(p, c, t, pos, valid):
+            """One masked decode step: slots where ``valid`` advance
+            their state; the rest carry it through bit-unchanged (the
+            null-round no-op — what lets recurrent families serve).
+            This pure body is shared verbatim with the fused serve
+            program (:mod:`repro.serve.fused`), so the fused scan and
+            this per-round loop run the same arithmetic."""
+            logits, new_c = decode_fn(p, cfg, c, t, pos, rt)
+            return logits, masking.masked_update(specs, c, new_c, valid)
+
+        def _reset_body(c, valid):
+            """Admission reset: zero the admitted slots' cache rows (a
+            no-op for the rest).  Shared with the fused program, like
+            ``_decode_body`` — see :func:`repro.models.masking.reset_rows`
+            for why recurrent families require it."""
+            return masking.reset_rows(specs, c, valid)
+
+        self._decode_body = _decode_body
+        self._reset_body = _reset_body
+        self.decode = jax.jit(_decode_body, donate_argnums=(1,))
+        self._reset_slots = jax.jit(_reset_body, donate_argnums=(0,))
         # slot state (the SMC ring of the serving plane)
         self.slot_req: List[Optional[Request]] = [None] * b
         self.slot_len = np.zeros(b, dtype=np.int64)
@@ -102,6 +126,9 @@ class ServeEngine:
         self.completed: List[Request] = []
         self.rounds = 0
         self.decode_steps = 0
+        # device->host syncs taken inside decode rounds (the logits
+        # readback) — the per-round hop the fused serve plane removes
+        self.host_syncs = 0
 
     # -- request plane -------------------------------------------------------
 
@@ -133,12 +160,16 @@ class ServeEngine:
         self.slot_req[slot] = req
         self.slot_len[slot] = 0
         b = self.ecfg.max_batch
+        valid = np.zeros(b, bool)
+        valid[slot] = True                # bystander slots: masked no-op
+        self.cache = self._reset_slots(self.cache, jnp.asarray(valid))
         for tok in req.prompt:
             tokens = np.zeros((b, 1), dtype=np.int32)
             tokens[slot, 0] = int(tok)
             pos = jnp.asarray(self.slot_len, jnp.int32)
             logits, self.cache = self.decode(self.params, self.cache,
-                                             jnp.asarray(tokens), pos)
+                                             jnp.asarray(tokens), pos,
+                                             jnp.asarray(valid))
             self.slot_len[slot] += 1
             self.decode_steps += 1
 
@@ -171,13 +202,17 @@ class ServeEngine:
             last = req.tokens_out[-1] if req.tokens_out else \
                 int(req.prompt[-1])
             tokens[i, 0] = last
-        # one fused decode for the whole ring with per-slot positions
-        # (a stalled slot's garbage write at its own position is
-        # overwritten by its real decode once the stall clears)
+        # one fused decode for the whole ring with per-slot positions;
+        # idle/stalled slots are masked no-ops (state carried through
+        # bit-unchanged — safe for KV and recurrent families alike)
+        valid = np.zeros(b, bool)
+        valid[active] = True
         pos = jnp.asarray(self.slot_len, jnp.int32)
         logits, self.cache = self.decode(self.params, self.cache,
-                                         jnp.asarray(tokens), pos)
+                                         jnp.asarray(tokens), pos,
+                                         jnp.asarray(valid))
         self.decode_steps += 1
+        self.host_syncs += 1             # logits cross device->host below
         logits = np.asarray(logits.astype(jnp.float32))
         for i in active:
             req = self.slot_req[i]
@@ -235,3 +270,4 @@ class ServeEngine:
         self.completed = []
         self.rounds = 0
         self.decode_steps = 0
+        self.host_syncs = 0

@@ -337,10 +337,22 @@ class ReplicatedEngine:
             fail_at: Optional[Mapping[int, Sequence[int]]] = None,
             arrive_fn: Optional[ArriveFn] = None,
             arrive_rounds: int = 0,
-            admission: Optional[ServeAdmission] = None
+            admission: Optional[ServeAdmission] = None,
+            fused: bool = False
             ) -> RunReport:
         """Drive every replica to drain, one multicast round per engine
         round, then settle the multicast and return the merged report.
+
+        ``fused=True`` executes the whole run as ONE compiled device
+        program — decode, multicast sweep, watermark-gated slot reuse
+        and the settle drain all inside a single ``lax.while_loop``
+        (:mod:`repro.serve.fused`), with zero host round-trips between
+        rounds (``extras["serve"]["host_hops"] == 0``).  Workloads the
+        fused program cannot express — view changes, open-loop
+        arrivals, stalls, admission policies, heterogeneous replicas —
+        fall back to this per-round loop EXPLICITLY:
+        ``extras["serve"]["fused"]`` is False and
+        ``extras["serve"]["fused_fallback"]`` names the reason.
 
         Every engine round is ONE stacked-program dispatch across all G
         replica topics (the program is traced once per scenario shape —
@@ -385,6 +397,22 @@ class ReplicatedEngine:
         (the engines drained first — e.g. an earlier cut re-admitted
         work sooner) are NOT an error: they surface in
         ``extras["serve"]["fail_at_unreached"]``."""
+        fused_fallback: Optional[str] = None
+        if fused:
+            from repro.serve import fused as fused_mod
+            fused_fallback = fused_mod.fused_fallback_reason(
+                self, fail_at=fail_at, arrive_fn=arrive_fn,
+                admission=admission, settle_max=settle_max)
+            if fused_fallback is None:
+                try:
+                    report = fused_mod.run_fused(self,
+                                                 max_rounds=max_rounds)
+                except fused_mod.FusedUnsupported as e:
+                    report, fused_fallback = None, str(e)
+                if report is not None:
+                    return report
+                fused_fallback = fused_fallback or (
+                    "run overflowed the fused round budget")
         self._reset_run_state()
         fail_at = {int(r): _as_waves(spec)
                    for r, spec in (fail_at or {}).items()}
@@ -398,6 +426,7 @@ class ReplicatedEngine:
                    for r in eng.completed)
         req0 = sum(len(eng.completed) for eng in self.engines)
         steps0 = sum(eng.decode_steps for eng in self.engines)
+        syncs0 = sum(eng.host_syncs for eng in self.engines)
         round_no = 0
         while (round_no < max_rounds
                and (round_no < arrive_rounds
@@ -506,7 +535,16 @@ class ReplicatedEngine:
             "max_queue_depth": max(self.queue_depth_log, default=0),
             "max_backlog": max(self.backlog_log, default=0),
             "wall_s": wall,
+            "fused": False,
+            # device->host syncs taken INSIDE the round loop: one logits
+            # readback per engine decode + one watermark view per
+            # multicast round — the per-round hop count the fused path
+            # drives to zero
+            "host_hops": (sum(eng.host_syncs for eng in self.engines)
+                          - syncs0) + round_no,
         }
+        if fused_fallback is not None:
+            report.extras["serve"]["fused_fallback"] = fused_fallback
         self.last_report = report
         return report
 

@@ -1,0 +1,567 @@
+"""Fused device-resident serve plane: decode inside the scan body, one
+compiled program per serve run (DESIGN.md Sec. 6).
+
+The paper's core lesson is that small-object replication amplifies every
+per-operation overhead until coordination is batched into the data path.
+The unfused serve plane still pays that overhead once per engine round:
+one jitted decode dispatch, a device->host logits sync, Python
+bookkeeping, then one stacked-sweep dispatch
+(:meth:`repro.serve.fanout.ReplicatedEngine.run`).  This module removes
+the hop entirely: a whole serve run — admission, prefill, decode, token
+emission, multicast publish, watermark-gated slot reuse, the quiescence
+drain — executes as ONE compiled ``lax.while_loop`` program whose round
+body composes the engine's masked decode step
+(:meth:`repro.serve.engine.ServeEngine` ``_decode_body``) with the
+multicast round body (:func:`repro.core.sweep.stream_stacked`, i.e.
+``step_backlog`` vmapped over replicas).  Slot state, decode caches, SST
+watermarks, backlogs, and slot holds all live in the carry; per-round
+event traces land in preallocated device buffers and cross to the host
+exactly once, after the loop exits.
+
+Equivalence contract (tested bit-for-bit in tests/test_serve_fused.py):
+
+* the same masked decode body runs in both paths, and a slot's decode
+  state depends only on its own (token, position) sequence — batch rows
+  are computed independently — so fusing admission-round prefills of
+  different slots into one masked step reproduces the sequential
+  per-slot prefill exactly;
+* the multicast rounds ARE :func:`repro.core.sweep.step_backlog` on the
+  same ``ready`` counts, so the round traces equal the streamed ones by
+  construction; the run hands them to
+  :meth:`repro.core.group.GroupStream.absorb` and the report/delivery
+  logs come out of the identical :class:`repro.core.group.GraphBackend`
+  post-processing;
+* holds pin and release against the in-carry watermark with the same
+  arithmetic as :meth:`ReplicatedEngine._sync_holds` /
+  :meth:`GroupStream.app_publish_index` (apps precede nulls within a
+  round), and the loop's serve/settle phase split mirrors the unfused
+  ``run`` loop + ``finish`` drain round-for-round
+  (:func:`repro.core.sweep.quiescent_stacked` is the same strict
+  quiescence test evaluated in-graph).
+
+What the fused path does NOT support — mid-run view changes
+(``fail_at``), open-loop arrivals, client stalls, admission policies,
+heterogeneous replicas — falls back to the per-round dispatch loop with
+the reason recorded in ``extras["serve"]["fused_fallback"]``; the
+chaos plane rides the fallback (DESIGN.md Secs. 7, 9).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import group as group_mod
+from repro.core import sweep as sweep_mod
+from repro.core.group import TRACE_EVENTS, RunReport, fused_stream_program
+from repro.models import masking
+from repro.models.layers import ParamSpec
+
+
+class FusedUnsupported(Exception):
+    """The workload needs a feature only the per-round loop has; the
+    caller falls back (explicitly, in extras) rather than fail."""
+
+
+def fused_fallback_reason(rep, *, fail_at=None, arrive_fn=None,
+                          admission=None,
+                          settle_max=None) -> Optional[str]:
+    """Why this run cannot take the fused path (None = it can).
+
+    The fused program is shape-static and closed-loop: every dynamic
+    feature of the unfused loop that reaches into Python mid-round —
+    view changes, open-loop arrival callbacks, stall callbacks,
+    admission policies, capped settles — keeps the per-round path."""
+    if fail_at:
+        return "fail_at: view changes cut through the unfused path"
+    if arrive_fn is not None:
+        return "arrive_fn: open-loop arrivals are host callbacks"
+    if rep.stall_fn is not None:
+        return "stall_fn: client stalls are host callbacks"
+    if admission is not None:
+        return "admission policy gates on host-side watermarks"
+    if settle_max is not None:
+        return "settle_max: capped settle needs the host drain loop"
+    e0 = rep.engines[0]
+    for eng in rep.engines:
+        if (eng.cfg is not e0.cfg and eng.cfg != e0.cfg) \
+                or eng.ecfg.max_batch != e0.ecfg.max_batch \
+                or eng.ecfg.max_len != e0.ecfg.max_len \
+                or eng.ecfg.eos_id != e0.ecfg.eos_id:
+            return "heterogeneous replicas (mixed model/engine configs)"
+        if eng.params is not e0.params:
+            return ("replicas do not share one params tree (the fused "
+                    "program folds every replica's slots into one "
+                    "decode batch)")
+        if any(r is not None for r in eng.slot_req):
+            return "engines must start with empty slot rings"
+    if not any(eng.queue for eng in rep.engines):
+        return "empty workload"
+    if any(len(r.prompt) == 0 for eng in rep.engines for r in eng.queue):
+        return "empty prompts"
+    if any(len(r.prompt) > e0.ecfg.max_len - 2
+           or len(r.prompt) + r.max_new_tokens > e0.ecfg.max_len
+           for eng in rep.engines for r in eng.queue):
+        return "request would overflow max_len mid-run"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# The one-program serve run
+# ---------------------------------------------------------------------------
+
+def _round_budget(n_reqs: int, slots: int, max_new: int, window: int,
+                  n_members: int, max_rounds: int) -> Tuple[int, int]:
+    """(serve-round cap, total cap incl. settle) — generous analytic
+    bounds; a run that overflows them falls back to the unfused loop
+    rather than truncate."""
+    waves = max(1, math.ceil(n_reqs / max(slots, 1)))
+    per_wave = max_new + 8 + 3 * math.ceil((max_new + 1)
+                                           / max(window, 1))
+    serve = min(max_rounds, waves * per_wave + 16)
+    settle = 2 * n_members + 16 + 3 * math.ceil(
+        slots * (max_new + 2) / max(window, 1))
+    return serve, serve + settle
+
+
+def _fold_caches(specs, trees):
+    """Concatenate per-replica cache trees along each leaf's batch axis:
+    the fused program decodes ALL replicas' slots in ONE masked step
+    (batch = G * slots).  Every decode-body op is row-independent along
+    the batch axis, so slot (g, s)'s arithmetic — and therefore its
+    tokens and state — is bit-identical to the per-replica step."""
+    return jax.tree.map(
+        lambda sp, *xs: jnp.concatenate(
+            xs, axis=masking.batch_axis(sp)),
+        specs, *trees, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _unfold_caches(specs, tree, n_g, slots):
+    """Split a folded cache tree back into per-replica trees."""
+    def cut(g):
+        return jax.tree.map(
+            lambda sp, x: jax.lax.slice_in_dim(
+                x, g * slots, (g + 1) * slots,
+                axis=masking.batch_axis(sp)),
+            specs, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return [cut(g) for g in range(n_g)]
+
+
+def _build_program(key, decode_body, reset_body, specs, shapes):
+    """Trace-once builder for one workload shape (see
+    :func:`repro.core.group.fused_stream_program`)."""
+    (n_g, slots, n_members, window, null_send, backend, r_max, p_max,
+     t_serve_cap, t_total, eos_id, max_len) = shapes
+    win_arr = np.full(n_g, window, np.int32)
+    ring = window if backend == "pallas" else 0
+    receive_fn = group_mod._kernel_receive(ring) \
+        if backend == "pallas" else None
+    i32 = jnp.int32
+
+    def serving_now(c, n_reqs):
+        live = jnp.any(c["active"]) | jnp.any(c["head"] < n_reqs)
+        return live & (c["t_serve"] < t_serve_cap)
+
+    def body_fn(c, params, prompts, prompt_len, max_new, n_reqs):
+        serving = serving_now(c, n_reqs)
+        t = c["t"]
+        depth = jnp.sum(n_reqs - c["head"]).astype(i32)
+
+        # ---- engine phase (admission -> prefill -> decode -> finish),
+        # skipped entirely on settle rounds ----------------------------
+        fields = (c["caches"], c["active"], c["held"], c["hold_target"],
+                  c["hold_idx"], c["pos"], c["last_tok"], c["slot_rid"],
+                  c["emitted"], c["slot_max_new"], c["apps_enq"],
+                  c["head"])
+
+        def engine_phase(f):
+            (caches, active, held, target, hidx, pos, last, rid,
+             emitted, mnew, enq, head) = f
+            # admission: k-th free slot (slot order) takes the k-th
+            # queued request — ServeEngine._admit's popleft loop
+            free = (~active) & (~held)
+            order = jnp.cumsum(free.astype(i32), axis=1) - 1
+            admit = free & (order < (n_reqs - head)[:, None])
+            ridx = head[:, None] + order
+            safe_r = jnp.where(admit, ridx, 0)
+            plen = jnp.take_along_axis(prompt_len, safe_r, axis=1)
+            amnew = jnp.take_along_axis(max_new, safe_r, axis=1)
+            pslot = jnp.stack([jnp.take(prompts[g], safe_r[g], axis=0)
+                               for g in range(n_g)])  # (G, B, P_max)
+            head = head + jnp.sum(admit, axis=1)
+            rid = jnp.where(admit, ridx, rid)
+            mnew = jnp.where(admit, amnew, mnew)
+            emitted = jnp.where(admit, 0, emitted)
+
+            # prefill: every admitted slot — across ALL replicas, the
+            # caches are folded into one (G*B)-row batch — feeds prompt
+            # token p at position p; bystanders are masked no-ops.  Rows
+            # are independent, so this equals the sequential per-slot
+            # prefill of the unfused engine bit-for-bit — including the
+            # admission reset (recurrent state must not leak from the
+            # slot's previous occupant).
+            def prefill(cs):
+                cs = reset_body(cs, admit.reshape(-1))
+
+                def pf(p, cs):
+                    valid = admit & (p < plen)          # (G, B)
+                    tok = jax.lax.dynamic_index_in_dim(
+                        pslot, p, axis=2, keepdims=False)
+                    tokens = jnp.where(valid, tok, 0).reshape(-1, 1)
+                    posv = jnp.where(admit, p, pos).reshape(-1)
+                    _, nc = decode_body(params, cs,
+                                        tokens.astype(i32),
+                                        posv.astype(i32),
+                                        valid.reshape(-1))
+                    return nc
+
+                return jax.lax.fori_loop(0, p_max, pf, cs)
+
+            caches = jax.lax.cond(jnp.any(admit), prefill,
+                                  lambda cs: cs, caches)
+            pos = jnp.where(admit, plen, pos)
+            # first decode input after prefill is the LAST prompt token
+            # (fed once more at position P — the unfused contract)
+            lastp = jnp.take_along_axis(
+                pslot, jnp.maximum(plen - 1, 0)[:, :, None],
+                axis=2)[:, :, 0]
+            last = jnp.where(admit, lastp, last)
+            active = active | admit
+
+            # main decode: one masked step for every replica's whole
+            # ring at once (the folded batch)
+            emit = active
+            tokens = jnp.where(emit, last, 0).reshape(-1, 1)
+            logits, caches = decode_body(params, caches,
+                                         tokens.astype(i32),
+                                         pos.reshape(-1).astype(i32),
+                                         emit.reshape(-1))
+            flat = logits.astype(jnp.float32).reshape(n_g * slots, -1)
+            nxt = jnp.argmax(flat, axis=-1).astype(i32) \
+                .reshape(n_g, slots)                  # (G, B)
+            last = jnp.where(emit, nxt, last)
+            emitted = emitted + emit.astype(i32)
+            pos = pos + emit.astype(i32)
+            done = emitted >= mnew
+            if eos_id is not None:
+                done = done | (nxt == eos_id)
+            fin = emit & (done | (pos >= max_len - 1))
+            active = active & ~fin
+            pos = jnp.where(fin, 0, pos)
+
+            counts = admit.astype(i32) + emit.astype(i32)
+            enq = enq + counts
+            # finished slots hold until the delivery watermark passes
+            # their last enqueued app (the SMC slot-reuse rule)
+            held = held | fin
+            target = jnp.where(fin, enq, target)
+            hidx = jnp.where(fin, -1, hidx)
+            adm_rec = jnp.where(admit, ridx, -1)
+            tok_rec = jnp.where(emit, nxt, -1)
+            return ((caches, active, held, target, hidx, pos, last,
+                     rid, emitted, mnew, enq, head),
+                    (counts, adm_rec, tok_rec, fin))
+
+        def idle_phase(f):
+            z = jnp.zeros((n_g, slots), i32)
+            neg = jnp.full((n_g, slots), -1, i32)
+            return f, (z, neg, neg, jnp.zeros((n_g, slots), bool))
+
+        fields, (counts, adm_rec, tok_rec, fin) = jax.lax.cond(
+            serving, engine_phase, idle_phase, fields)
+        (caches, active, held, target, hidx, pos, last, rid, emitted,
+         mnew, enq, head) = fields
+
+        # ---- multicast sweep: the SAME round body the stream runs ----
+        old = c["states"]
+        (states, backlogs), (batch, pub, nulls) = \
+            sweep_mod.stream_stacked(
+                old, c["backlogs"], counts, windows=win_arr,
+                null_send=null_send, receive_fn=receive_fn)
+
+        # ---- holds: pin at the k-th app's publish index, release on
+        # the watermark (ReplicatedEngine._sync_holds, in-graph) -------
+        crossed = held & (hidx < 0) & (target > 0) \
+            & (states.app_sent >= target)
+        pin = old.published + (target - old.app_sent) - 1
+        hidx = jnp.where(crossed, pin, hidx)
+        d = jnp.min(states.delivered_num, axis=1)       # (G,)
+        ranks = jnp.arange(slots)
+        sd = jnp.where(d[:, None] >= ranks[None, :],
+                       (d[:, None] - ranks[None, :]) // slots + 1, 0)
+        freed = held & (hidx >= 0) & (sd > hidx)
+        held = held & ~freed
+
+        return {
+            "t": t + 1,
+            "t_serve": c["t_serve"] + serving.astype(i32),
+            "states": states, "backlogs": backlogs, "caches": caches,
+            "active": active, "held": held, "hold_target": target,
+            "hold_idx": hidx, "pos": pos, "last_tok": last,
+            "slot_rid": rid, "emitted": emitted, "slot_max_new": mnew,
+            "apps_enq": enq, "head": head,
+            "tb_batch": c["tb_batch"].at[t].set(batch.astype(i32)),
+            "tb_pub": c["tb_pub"].at[t].set(pub.astype(i32)),
+            "tb_nulls": c["tb_nulls"].at[t].set(nulls.astype(i32)),
+            "tb_admit": c["tb_admit"].at[t].set(adm_rec),
+            "tb_tok": c["tb_tok"].at[t].set(tok_rec),
+            "tb_fin": c["tb_fin"].at[t].set(fin),
+            "tb_free": c["tb_free"].at[t].set(freed),
+            "tb_backlog": c["tb_backlog"].at[t].set(
+                jnp.sum(backlogs).astype(i32)),
+            "tb_depth": c["tb_depth"].at[t].set(depth),
+        }
+
+    def program(params, caches, prompts, prompt_len, max_new, n_reqs):
+        TRACE_EVENTS.append(((n_g, n_members, slots), (window,) * n_g,
+                             backend + "+decode"))
+        c = {
+            "t": jnp.asarray(0, i32), "t_serve": jnp.asarray(0, i32),
+            "states": sweep_mod.batch_states(n_members, slots, n_g),
+            "backlogs": jnp.zeros((n_g, slots), i32),
+            "caches": _fold_caches(specs, caches),
+            "active": jnp.zeros((n_g, slots), bool),
+            "held": jnp.zeros((n_g, slots), bool),
+            "hold_target": jnp.zeros((n_g, slots), i32),
+            "hold_idx": jnp.full((n_g, slots), -1, i32),
+            "pos": jnp.zeros((n_g, slots), i32),
+            "last_tok": jnp.zeros((n_g, slots), i32),
+            "slot_rid": jnp.full((n_g, slots), -1, i32),
+            "emitted": jnp.zeros((n_g, slots), i32),
+            "slot_max_new": jnp.zeros((n_g, slots), i32),
+            "apps_enq": jnp.zeros((n_g, slots), i32),
+            "head": jnp.zeros((n_g,), i32),
+            "tb_batch": jnp.zeros((t_total, n_g, n_members), i32),
+            "tb_pub": jnp.zeros((t_total, n_g, slots), i32),
+            "tb_nulls": jnp.zeros((t_total, n_g, slots), i32),
+            "tb_admit": jnp.full((t_total, n_g, slots), -1, i32),
+            "tb_tok": jnp.full((t_total, n_g, slots), -1, i32),
+            "tb_fin": jnp.zeros((t_total, n_g, slots), bool),
+            "tb_free": jnp.zeros((t_total, n_g, slots), bool),
+            "tb_backlog": jnp.zeros((t_total,), i32),
+            "tb_depth": jnp.zeros((t_total,), i32),
+        }
+
+        def cond(c):
+            q = sweep_mod.quiescent_stacked(c["states"], c["backlogs"])
+            return (c["t"] < t_total) & (serving_now(c, n_reqs) | ~q)
+
+        out = jax.lax.while_loop(
+            cond, lambda c: body_fn(c, params, prompts, prompt_len,
+                                    max_new, n_reqs), c)
+        # hand per-replica cache trees back (sliced in-program: free
+        # at trace time, no eager per-leaf dispatches on the host)
+        out["caches"] = tuple(
+            _unfold_caches(specs, out["caches"], n_g, slots))
+        return out
+
+    return jax.jit(program)
+
+
+def run_fused(rep, *, max_rounds: int = 10_000) -> Optional[RunReport]:
+    """Execute one serve run of ``rep`` (a
+    :class:`repro.serve.fanout.ReplicatedEngine`) as ONE compiled
+    program, then reconstruct the engines' and fan-out's host state from
+    the device round traces so callers see exactly what the per-round
+    loop would have produced.  Returns None when the run overflows the
+    analytic round budget (the caller falls back to the unfused loop —
+    engine state is untouched until success, so the fallback restarts
+    cleanly).  Raises :class:`FusedUnsupported` for unsupported
+    workload shapes."""
+    engines = rep.engines
+    e0 = engines[0]
+    n_g, slots = len(engines), e0.ecfg.max_batch
+    subs = len(rep.topics[0].subscribers)
+    n_members = slots + subs
+    reqs = [list(eng.queue) for eng in engines]
+    r_max = max(len(r) for r in reqs)
+    p_max = max(len(q.prompt) for r in reqs for q in r)
+    m_max = max(q.max_new_tokens for r in reqs for q in r)
+
+    rep._reset_run_state()
+    window = rep.topics[0].window
+    t_serve_cap, t_total = _round_budget(r_max, slots, m_max, window,
+                                         n_members, max_rounds)
+    wall0 = time.perf_counter()
+    tok0 = sum(len(r.tokens_out) for eng in engines
+               for r in eng.completed)
+    req0 = sum(len(eng.completed) for eng in engines)
+
+    key = (repr(e0.cfg), e0.ecfg.max_batch, e0.ecfg.max_len,
+           e0.ecfg.eos_id, repr(e0.rt), n_g, slots, n_members, window,
+           rep.backend, r_max, p_max, t_serve_cap, t_total)
+    shapes = (n_g, slots, n_members, window, True, rep.backend, r_max,
+              p_max, t_serve_cap, t_total, e0.ecfg.eos_id,
+              e0.ecfg.max_len)
+    program = fused_stream_program(
+        key, lambda: _build_program(key, e0._decode_body,
+                                    e0._reset_body, e0.cache_specs,
+                                    shapes))
+
+    prompts = np.zeros((n_g, r_max, p_max), np.int32)
+    prompt_len = np.zeros((n_g, r_max), np.int32)
+    max_new = np.zeros((n_g, r_max), np.int32)
+    n_reqs = np.asarray([len(r) for r in reqs], np.int32)
+    for g, rs in enumerate(reqs):
+        for i, q in enumerate(rs):
+            prompts[g, i, :len(q.prompt)] = np.asarray(q.prompt,
+                                                       np.int32)
+            prompt_len[g, i] = len(q.prompt)
+            max_new[g, i] = q.max_new_tokens
+    out = program(e0.params, tuple(eng.cache for eng in engines),
+                  jnp.asarray(prompts), jnp.asarray(prompt_len),
+                  jnp.asarray(max_new), jnp.asarray(n_reqs))
+
+    # bind the stream while the device loop runs (dispatch is async;
+    # the stream is first needed at absorb time, after the loop exits)
+    bound = rep.domain.bind(backend=rep.backend)
+    stream = bound.stream
+    if stream._mask_args:
+        raise FusedUnsupported("heterogeneous topic shapes (padded "
+                               "stack) — fused path needs a "
+                               "homogeneous slot ring")
+    if not stream.group.cfg.flags.null_send:
+        raise FusedUnsupported("null_send disabled: the in-graph drain "
+                               "may never quiesce")
+    if stream.windows[0] != window:
+        raise FusedUnsupported("topic window disagrees with the bound "
+                               "stream's protocol window")
+
+    # ---- host reconstruction (one device->host crossing, post-loop) --
+    host = jax.device_get({k: out[k] for k in
+                           ("t", "t_serve", "head", "active", "pos",
+                            "slot_rid", "apps_enq", "held", "tb_batch",
+                            "tb_pub", "tb_nulls", "tb_admit", "tb_tok",
+                            "tb_fin", "tb_free", "tb_backlog",
+                            "tb_depth")})
+    t_end = int(host["t"])
+    t_serve = int(host["t_serve"])
+    head = host["head"]
+    active = host["active"]
+    live = active.any() or (head < n_reqs).any()
+    if live and t_serve < max_rounds:
+        return None                       # budget overflow: fall back
+    if t_end >= t_total and not bool(sweep_mod.quiescent_stacked(
+            out["states"], out["backlogs"])):
+        return None     # exited on the round cap mid-drain: fall back
+
+    tb = {k: host[k][:t_end] for k in
+          ("tb_batch", "tb_pub", "tb_nulls", "tb_admit", "tb_tok",
+           "tb_fin", "tb_free", "tb_backlog", "tb_depth")}
+    counts = (tb["tb_admit"] >= 0).astype(np.int64) \
+        + (tb["tb_tok"] >= 0).astype(np.int64)          # (T, G, B)
+    stream.absorb(out["states"], out["backlogs"],
+                  list(tb["tb_batch"]), list(tb["tb_pub"]),
+                  list(tb["tb_nulls"]),
+                  [counts[:, g].sum(axis=0) for g in range(n_g)])
+
+    # engines: consume queues, install tokens/completions/caches
+    fins: List[Tuple[int, int, int]] = []   # (t, g, slot)
+    for t, g, s in zip(*np.nonzero(tb["tb_fin"])):
+        fins.append((int(t), int(g), int(s)))
+    fins.sort()
+    admit_at: dict = {}                     # (g, ridx) -> (t, slot)
+    for t, g, s in zip(*np.nonzero(tb["tb_admit"] >= 0)):
+        admit_at[(int(g), int(tb["tb_admit"][t, g, s]))] = \
+            (int(t), int(s))
+    now = time.time()
+    decode_steps0 = sum(e.decode_steps for e in engines)
+    for g, eng in enumerate(engines):
+        n_admitted = int(head[g])
+        for i in range(n_admitted):
+            req = reqs[g][i]
+            t0_r, s = admit_at[(g, i)]
+            rep.admit_rounds[req.rid] = t0_r
+            rep.admit_slots[req.rid] = (g, s)
+            fin_ts = [t for (t, gg, ss) in fins
+                      if gg == g and ss == s and t >= t0_r]
+            t_fin = min(fin_ts) if fin_ts else t_end
+            toks = tb["tb_tok"][t0_r:t_fin + 1, g, s]
+            req.tokens_out = [int(x) for x in toks if x >= 0]
+            eng.decode_steps += int(prompt_len[g, i])
+            if fin_ts:
+                req.finished_at = now
+                rep.finish_round_by_rid[req.rid] = t_fin
+        # completion order: (finish round, slot) — the per-round loop's
+        # append order
+        for t, gg, s in fins:
+            if gg != g:
+                continue
+            ridx = _owner_at(tb["tb_admit"], t, g, s)
+            eng.completed.append(reqs[g][ridx])
+        for _ in range(n_admitted):
+            eng.queue.popleft()
+        eng.slot_req = [None] * slots
+        eng.slot_len[:] = 0
+        for s in range(slots):
+            if active[g, s]:
+                ridx = int(host["slot_rid"][g, s])
+                eng.slot_req[s] = reqs[g][ridx]
+                eng.slot_len[s] = int(host["pos"][g, s])
+        eng.rounds += t_serve
+        eng.decode_steps += int(
+            (tb["tb_tok"][:, g] >= 0).any(axis=1).sum())
+        eng.cache = out["caches"][g]
+        rep._apps_enqueued[g][:] = host["apps_enq"][g]
+    rep.finish_rounds = [(g, s, t) for (t, g, s) in fins]
+
+    # frees: serve-round frees at their round; settle-round frees all
+    # land in the single post-finish sync at round t_serve, ordered by
+    # hold creation (finish round, slot) per replica
+    frees = []
+    for t, g, s in zip(*np.nonzero(tb["tb_free"])):
+        t, g, s = int(t), int(g), int(s)
+        f_ts = [ft for (ft, gg, ss) in fins
+                if gg == g and ss == s and ft <= t]
+        frees.append((min(t, t_serve), g, max(f_ts) if f_ts else -1, s))
+    frees.sort()
+    rep.free_rounds = [(g, s, t) for (t, g, _f, s) in frees]
+    rep.queue_depth_log = [int(x) for x in tb["tb_depth"][:t_serve]]
+    rep.backlog_log = [int(x) for x in tb["tb_backlog"][:t_serve]]
+
+    report, logs = bound.finish()
+    wall = time.perf_counter() - wall0
+    tokens = sum(len(r.tokens_out) for eng in engines
+                 for r in eng.completed) - tok0
+    report.extras["delivery_logs"] = logs
+    report.extras["serve"] = {
+        "replicas": n_g,
+        "engine_rounds": t_serve,
+        "drained": all(eng.drained() for eng in engines),
+        "decode_steps": sum(e.decode_steps
+                            for e in engines) - decode_steps0,
+        "requests": sum(len(e.completed) for e in engines) - req0,
+        "tokens": tokens,
+        "tokens_per_s": tokens / wall if wall > 0 else 0.0,
+        "stall_rounds": 0,
+        "held_slots": int(host["held"].sum()),
+        "view_changes": 0,
+        "slot_failures": 0,
+        "voided_requests": 0,
+        "requeued_requests": 0,
+        "slot_failure_log": [],
+        "fail_at_unreached": [],
+        "shed_requests": 0,
+        "max_queue_depth": max(rep.queue_depth_log, default=0),
+        "max_backlog": max(rep.backlog_log, default=0),
+        "wall_s": wall,
+        "fused": True,
+        "host_hops": 0,
+        "fused_rounds": t_end,
+        "fused_round_budget": t_total,
+    }
+    rep.last_report = report
+    return report
+
+
+def _owner_at(tb_admit: np.ndarray, t: int, g: int, s: int) -> int:
+    """Request index occupying slot (g, s) at round t: the latest
+    admission into that slot at or before t."""
+    col = tb_admit[:t + 1, g, s]
+    ts = np.nonzero(col >= 0)[0]
+    return int(col[ts[-1]])

@@ -345,3 +345,44 @@ def test_chaos_serve_soak_graph_pallas_identical(seed):
     assert g.killed == p.killed
     assert g.views_installed == p.views_installed
     assert g.rounds == p.rounds
+
+
+@soak
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_fused_serve_falls_back_explicitly(seed):
+    """The fused serve path under chaos: a mid-run SUBSCRIBER failure is
+    a view change, which the one-program fused run cannot express — the
+    run must complete through the per-round loop AND say so
+    (``extras["serve"]["fused"]`` False, ``fused_fallback`` naming the
+    reason), with results identical to asking for the loop directly."""
+    from test_viewchange import _fan_engines
+    from repro.serve.engine import Request
+    from repro.serve.fanout import ReplicatedEngine
+
+    engines, mcfg = _fan_engines()
+    fail_round = 1 + seed % 3
+    # replica 0's nodes: slots 0-1, subscribers 2-3 (two per replica)
+    fail_at = {fail_round: [2]}
+    results = {}
+    for fused in (False, True):
+        rep_eng = ReplicatedEngine(engines, subscribers_per_replica=2,
+                                   window=4, backend="graph")
+        rep_eng.reset()
+        rng = np.random.default_rng(seed)
+        for g in range(2):
+            for i in range(3):
+                rep_eng.submit(g, Request(
+                    rid=g * 10 + i,
+                    prompt=rng.integers(0, mcfg.vocab_size, 3,
+                                        dtype=np.int32),
+                    max_new_tokens=4))
+        report = rep_eng.run(fail_at=fail_at, fused=fused)
+        results[fused] = (rep_eng.completed(), report)
+    serve = results[True][1].extras["serve"]
+    assert serve["fused"] is False
+    assert "fail_at" in serve["fused_fallback"]
+    assert serve["view_changes"] == 1
+    assert serve["drained"]
+    assert results[True][0] == results[False][0]
+    assert serve["engine_rounds"] == \
+        results[False][1].extras["serve"]["engine_rounds"]

@@ -1,0 +1,206 @@
+"""Fused device-resident serve plane (repro.serve.fused).
+
+Seeded conformance: a fused run — the whole serve session as ONE
+compiled program — must be bit-identical to the per-round dispatch loop
+on both stacked backends: same tokens, same per-topic delivery logs,
+same hold/free traces, same report.  Plus the recurrent-family unlock
+(masked decode lets ssm/hybrid ride the slot ring) and the explicit
+fallback contract for workloads the fused program cannot express.
+"""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import group as group_mod
+from repro.models import layers, registry
+from repro.models.config import ModelConfig
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.fanout import ReplicatedEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+fast = pytest.mark.fast
+
+SEED = int(os.environ.get("SERVE_FUSED_SEED", "7"))
+
+_DENSE = ModelConfig(name="serve-fused-test", family="dense", n_layers=2,
+                     d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                     vocab_size=512, head_dim=32, tie_embeddings=True)
+registry.register("serve-fused-test", lambda: _DENSE)
+
+
+def _register_reduced(preset: str, name: str) -> ModelConfig:
+    cfg = registry.get(preset).cfg.reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, name=name)
+    registry.register(name, lambda: cfg)
+    return cfg
+
+
+def _rep(arch: str, cfg: ModelConfig, *, backend="graph", slots=2,
+         replicas=2, reqs=3, prompt=3, new_tokens=4, seed=SEED):
+    params = layers.init_tree(registry.param_specs(cfg),
+                              jax.random.key(0))
+    engines = [ServeEngine(arch, params, cfg,
+                           EngineConfig(max_batch=slots, max_len=48))
+               for _ in range(replicas)]
+    rep = ReplicatedEngine(engines, subscribers_per_replica=1, window=4,
+                           backend=backend)
+    rng = np.random.default_rng(seed)
+    for g in range(replicas):
+        for i in range(reqs):
+            rep.submit(g, Request(
+                rid=g * 10 + i,
+                prompt=rng.integers(1, cfg.vocab_size,
+                                    size=prompt).astype(np.int32),
+                max_new_tokens=new_tokens))
+    return rep
+
+
+def _logs_equal(a, b) -> bool:
+    if sorted(a) != sorted(b):
+        return False
+    for k in a:
+        la, lb = a[k], b[k]
+        if la.n_senders != lb.n_senders \
+                or la.delivered_seq != lb.delivered_seq:
+            return False
+        if len(la.is_app) != len(lb.is_app) or any(
+                not np.array_equal(x, y)
+                for x, y in zip(la.is_app, lb.is_app)):
+            return False
+    return True
+
+
+def _assert_conformant(rep_u, r_u, rep_f, r_f):
+    sf = r_f.extras["serve"]
+    assert sf["fused"] is True, sf.get("fused_fallback")
+    assert sf["host_hops"] == 0
+    assert r_u.extras["serve"]["host_hops"] > 0
+    # tokens: every request's full stream, bit-for-bit
+    assert rep_u.completed() == rep_f.completed()
+    # the multicast side: identical total-order delivery logs
+    assert _logs_equal(r_u.extras["delivery_logs"],
+                       r_f.extras["delivery_logs"])
+    # serve traces: admissions, finishes, watermark-gated frees,
+    # queue-depth and backlog evolution — round-for-round
+    assert rep_u.admit_rounds == rep_f.admit_rounds
+    assert rep_u.admit_slots == rep_f.admit_slots
+    assert rep_u.finish_rounds == rep_f.finish_rounds
+    assert rep_u.free_rounds == rep_f.free_rounds
+    assert rep_u.finish_round_by_rid == rep_f.finish_round_by_rid
+    assert rep_u.queue_depth_log == rep_f.queue_depth_log
+    assert rep_u.backlog_log == rep_f.backlog_log
+    # the merged report (timing fields aside)
+    assert r_u.delivered_app_msgs == r_f.delivered_app_msgs
+    assert r_u.nulls_sent == r_f.nulls_sent
+    assert r_u.extras["streamed_rounds"] == r_f.extras["streamed_rounds"]
+    su = r_u.extras["serve"]
+    for k in ("engine_rounds", "decode_steps", "requests", "tokens",
+              "drained", "held_slots", "replicas"):
+        assert su[k] == sf[k], (k, su[k], sf[k])
+    assert sf["drained"]
+
+
+@fast
+@pytest.mark.parametrize("backend", ["graph", "pallas"])
+def test_fused_bit_identical_to_round_loop(backend):
+    rep_u = _rep("serve-fused-test", _DENSE, backend=backend)
+    r_u = rep_u.run()
+    rep_f = _rep("serve-fused-test", _DENSE, backend=backend)
+    r_f = rep_f.run(fused=True)
+    _assert_conformant(rep_u, r_u, rep_f, r_f)
+
+
+@fast
+def test_fused_warm_run_is_one_program_zero_hops():
+    """A warm fused run appends at most one TRACE_EVENTS entry (the
+    fused program itself; zero once cached) and takes zero device->host
+    hops between rounds."""
+    rep = _rep("serve-fused-test", _DENSE)
+    rep.run(fused=True)                       # cold: traces the program
+    rep2 = _rep("serve-fused-test", _DENSE)   # same workload shape
+    n0 = len(group_mod.TRACE_EVENTS)
+    r = rep2.run(fused=True)
+    assert len(group_mod.TRACE_EVENTS) - n0 == 0, \
+        "warm fused run re-traced"
+    assert r.extras["serve"]["fused"] is True
+    assert r.extras["serve"]["host_hops"] == 0
+
+
+@fast
+def test_fused_fallback_is_explicit():
+    """A workload the fused program cannot express (client stalls) runs
+    the per-round loop and SAYS so — extras carry fused=False plus the
+    reason — with results identical to asking for the loop directly."""
+    def stall(g, rnd):
+        return (0,) if rnd in (2, 3) else ()
+
+    rep_u = _rep("serve-fused-test", _DENSE)
+    rep_u.stall_fn = stall
+    r_u = rep_u.run()
+    rep_f = _rep("serve-fused-test", _DENSE)
+    rep_f.stall_fn = stall
+    r_f = rep_f.run(fused=True)
+    sf = r_f.extras["serve"]
+    assert sf["fused"] is False
+    assert "stall" in sf["fused_fallback"]
+    assert rep_u.completed() == rep_f.completed()
+    assert r_u.extras["serve"]["engine_rounds"] == sf["engine_rounds"]
+    # engine state untouched by the aborted fused attempt: queues were
+    # read, not popped, so the fallback served every request
+    assert sf["drained"] and sf["requests"] == 6
+
+
+# ---------------------------------------------------------------------------
+# recurrent families: masked decode lets ssm/hybrid ride the slot ring
+# ---------------------------------------------------------------------------
+
+
+@fast
+@pytest.mark.parametrize("preset", ["mamba2-2.7b", "zamba2-2.7b"])
+def test_recurrent_family_serves(preset):
+    """ssm/hybrid decode state mutates cumulatively every step; the
+    validity-masked decode body (repro.models.masking) carries invalid
+    slots through bit-unchanged, so continuous batching with idle slots
+    and mid-ring admissions yields the same tokens as serving each
+    request alone."""
+    name = f"serve-fused-{preset.split('-')[0]}"
+    cfg = _register_reduced(preset, name)
+    rep = _rep(name, cfg, replicas=1, slots=2, reqs=3, prompt=3,
+               new_tokens=4)
+    solo_tokens = {}
+    for req in list(rep.engines[0].queue):
+        solo = _rep(name, cfg, replicas=1, slots=2, reqs=0)
+        solo.submit(0, Request(rid=req.rid,
+                               prompt=np.array(req.prompt, np.int32),
+                               max_new_tokens=req.max_new_tokens))
+        solo.run()
+        solo_tokens[req.rid] = solo.engines[0].completed[0].tokens_out
+    report = rep.run()
+    assert report.extras["serve"]["drained"]
+    assert report.extras["serve"]["requests"] == 3
+    for req in rep.engines[0].completed:
+        assert req.tokens_out == solo_tokens[req.rid], \
+            f"{preset} rid={req.rid}: batched != solo decode"
+
+
+@fast
+def test_fused_serves_recurrent_family():
+    """The fused program scans the same masked decode body, so the
+    recurrent unlock carries over: ssm fused == ssm unfused."""
+    name = "serve-fused-mamba2"
+    try:
+        cfg = registry.get(name).cfg
+    except KeyError:
+        cfg = _register_reduced("mamba2-2.7b", name)
+    rep_u = _rep(name, cfg, replicas=1, slots=2, reqs=3, prompt=3,
+                 new_tokens=4)
+    r_u = rep_u.run()
+    rep_f = _rep(name, cfg, replicas=1, slots=2, reqs=3, prompt=3,
+                 new_tokens=4)
+    r_f = rep_f.run(fused=True)
+    _assert_conformant(rep_u, r_u, rep_f, r_f)
