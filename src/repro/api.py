@@ -30,7 +30,8 @@ from repro.core.costmodel import HOST_X86, RDMA_CX6, TPU_ICI
 from repro.core.dds import (BoundDomain, Domain, QoS, Topic,
                             many_topic_domain, single_topic_domain)
 from repro.core.group import (BACKENDS, TRACE_MAXLEN, Delivery, DeliveryLog,
-                              DESBackend, EpochCarry, GraphBackend, Group,
+                              DESBackend, DESLoopBackend, EpochCarry,
+                              GraphBackend, Group,
                               GroupConfig, GroupStream, PallasBackend,
                               ProtocolBackend, RunReport, SenderPattern,
                               SpindleFlags, StreamView, SubgroupHandle,
@@ -46,7 +47,8 @@ from repro.core.views import MembershipService, View
 # ``from repro.load import ...`` (DESIGN.md Sec. 10).
 
 __all__ = [
-    "BACKENDS", "BoundDomain", "DESBackend", "Delivery", "DeliveryLog",
+    "BACKENDS", "BoundDomain", "DESBackend", "DESLoopBackend", "Delivery",
+    "DeliveryLog",
     "Domain", "EpochCarry", "GraphBackend", "Group", "GroupConfig",
     "GroupStream",
     "HOST_X86", "MembershipService", "PallasBackend", "ProtocolBackend",

@@ -54,7 +54,8 @@ class InvariantViolation(AssertionError):
 class ChaosReport:
     """What one soak did and verified.  ``extras`` holds plain-data
     digests (delivery sequences, per-node app counts, applied rounds)
-    that must be bit-identical for the same seed across graph/pallas."""
+    that must be bit-identical for the same seed across graph, pallas
+    and the two-phase des stream (DESIGN.md Sec. 12)."""
 
     target: str                       # "stream" | "serve" | "gradsync"
     seed: int
@@ -522,7 +523,8 @@ def chaos_soak(target, spec: FaultSpec, *, seed: int = 0,
     (``GroupStream`` / ``ReplicatedEngine`` / ``BucketSyncStream``) use
     their own.  Deterministic: same target shape + spec + seed =>
     same schedule, same report, on every backend that is bit-identical
-    (graph vs pallas — the soak tests assert exactly that)."""
+    (graph vs pallas vs des, whose numpy round mirror replays the same
+    int32 sweep arithmetic — the soak tests assert exactly that)."""
     from repro.core.gradsync import BucketSyncStream
     if isinstance(target, BucketSyncStream):
         return _soak_gradsync(target, spec, seed)

@@ -51,6 +51,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import costmodel, delivery as delivery_mod
+from repro.core import desgraph as desgraph_mod
+from repro.core import desreplay as desreplay_mod
 from repro.core import placement as placement_mod
 from repro.core import simulator as sim
 from repro.core import sst
@@ -629,47 +631,80 @@ class Group:
 
 
 # ---------------------------------------------------------------------------
-# "des" backend — wraps the discrete-event simulator
+# "des" / "des-loop" backends — the discrete-event simulator.  "des" is
+# the two-phase simulate-then-execute split (DESIGN.md Sec. 12):
+# repro.core.desgraph timestamps the event timeline, repro.core.desreplay
+# replays the emitted graph.  "des-loop" is the legacy single-phase
+# event loop, kept for differential testing — both produce bit-identical
+# results by construction.
 # ---------------------------------------------------------------------------
 
 
-class DESBackend:
-    name = "des"
+def _des_logs(groups) -> Dict[int, DeliveryLog]:
+    """Delivery logs from final per-subgroup DES state (either phase-1
+    ``DesGraph.groups`` or the legacy ``Simulator.groups``)."""
+    logs = {}
+    for g in groups:
+        is_app = [~np.isnan(g.gen_log[s][: int(g.gen_len[s])])
+                  for s in range(g.n_s)]
+        delivered = {node: int(g.deliv_seen[g.member_pos[node],
+                                            g.member_pos[node]])
+                     for node in g.spec.members}
+        logs[g.gid] = DeliveryLog(n_senders=g.n_s, is_app=is_app,
+                                  delivered_seq=delivered)
+    return logs
+
+
+def _des_report(name: str, cfg: GroupConfig, result: sim.SimResult,
+                groups) -> Tuple[RunReport, Dict[int, DeliveryLog]]:
+    """Shared DES report assembly — both the two-phase ``des`` path and
+    the legacy ``des-loop`` lower their :class:`SimResult` + final group
+    state through this, so bit-identity between them is a statement
+    about the simulators, not the reporting glue."""
+    logs = _des_logs(groups)
+    if cfg.target_delivered is not None:
+        for log in logs.values():
+            log.truncate_to_app_target(cfg.target_delivered)
+    # app/null accounting comes from the (possibly clipped) delivery
+    # logs so it always matches what delivered()/upcalls expose;
+    # throughput/latency stay the DES's timing truths.
+    n_app, n_null = _sum_delivered(logs)
+    report = RunReport(
+        backend=name,
+        throughput_GBps=result.throughput_GBps,
+        mean_latency_us=result.mean_latency_us,
+        p99_latency_us=result.p99_latency_us,
+        duration_us=result.duration_us,
+        delivered_app_msgs=n_app,
+        delivered_null_msgs=n_null,
+        nulls_sent=result.nulls_sent,
+        rdma_writes=result.rdma_writes,
+        rounds=result.sweeps,
+        per_node_throughput=result.per_node_throughput,
+        stalled=result.stalled,
+        send_batches=result.send_batches,
+        recv_batches=result.recv_batches,
+        deliv_batches=result.deliv_batches,
+        extras={"post_time_us": result.post_time_us,
+                "predicate_time_us": result.predicate_time_us,
+                "sender_blocked_us": result.sender_blocked_us},
+    )
+    return report, logs
+
+
+class DESLoopBackend:
+    """The legacy single-phase DES event loop (``des-loop``), retained
+    for differential testing of the two-phase ``des`` path
+    (DESIGN.md Sec. 12).  Not streamable — use ``des`` for that."""
+
+    name = "des-loop"
 
     def run(self, cfg: GroupConfig, counts: Dict[int, np.ndarray]
             ) -> Tuple[RunReport, Dict[int, DeliveryLog]]:
         sim_cfg = self._lower(cfg, counts)
         simulator = sim.Simulator(sim_cfg)
         result = simulator.run()
-        logs = self._logs(simulator)
-        if cfg.target_delivered is not None:
-            for log in logs.values():
-                log.truncate_to_app_target(cfg.target_delivered)
-        # app/null accounting comes from the (possibly clipped) delivery
-        # logs so it always matches what delivered()/upcalls expose;
-        # throughput/latency stay the DES's timing truths.
-        n_app, n_null = _sum_delivered(logs)
-        report = RunReport(
-            backend=self.name,
-            throughput_GBps=result.throughput_GBps,
-            mean_latency_us=result.mean_latency_us,
-            p99_latency_us=result.p99_latency_us,
-            duration_us=result.duration_us,
-            delivered_app_msgs=n_app,
-            delivered_null_msgs=n_null,
-            nulls_sent=result.nulls_sent,
-            rdma_writes=result.rdma_writes,
-            rounds=result.sweeps,
-            per_node_throughput=result.per_node_throughput,
-            stalled=result.stalled,
-            send_batches=result.send_batches,
-            recv_batches=result.recv_batches,
-            deliv_batches=result.deliv_batches,
-            extras={"post_time_us": result.post_time_us,
-                    "predicate_time_us": result.predicate_time_us,
-                    "sender_blocked_us": result.sender_blocked_us},
-        )
-        return report, logs
+        return _des_report(self.name, cfg, result, simulator.groups)
 
     @staticmethod
     def _lower(cfg: GroupConfig, counts: Dict[int, np.ndarray]
@@ -690,19 +725,6 @@ class DESBackend:
         return cfg.to_sim_config(
             subgroups=tuple(specs),
             patterns=tuple(patterns.items()))
-
-    @staticmethod
-    def _logs(simulator: sim.Simulator) -> Dict[int, DeliveryLog]:
-        logs = {}
-        for g in simulator.groups:
-            is_app = [~np.isnan(g.gen_log[s][: int(g.gen_len[s])])
-                      for s in range(g.n_s)]
-            delivered = {node: int(g.deliv_seen[g.member_pos[node],
-                                                g.member_pos[node]])
-                         for node in g.spec.members}
-            logs[g.gid] = DeliveryLog(n_senders=g.n_s, is_app=is_app,
-                                      delivered_seq=delivered)
-        return logs
 
 
 # ---------------------------------------------------------------------------
@@ -1347,6 +1369,45 @@ class PallasBackend(GraphBackend):
     name = "pallas"
 
 
+class DESBackend(GraphBackend):
+    """The two-phase DES (DESIGN.md Sec. 12) — the default ``des`` path.
+
+    Scheduled runs execute phase 1 (:func:`repro.core.desgraph.simulate`,
+    the slimmed event-level pass emitting the compact event graph) then
+    phase 2 (:func:`repro.core.desreplay.replay`, the vectorized
+    reconstruction), bit-identical to the legacy ``des-loop`` — that
+    split is what makes 256–4096-node fleets conformance-testable.
+
+    Streaming (:class:`GroupStream`) runs on the numpy round mirror
+    (``stream_numpy``): the same :func:`repro.core.sweep.step_backlog`
+    arithmetic evaluated host-side in int32, driven through the exact
+    GraphBackend trim/carry/log machinery inherited here — so streamed
+    des rounds, cut epochs and :class:`EpochCarry` contents are
+    bit-identical to graph/pallas streams fed the same ready rows, not
+    merely order-invariant.
+    """
+
+    name = "des"
+    # GroupStream: dispatch rounds to the numpy mirror, not a jitted
+    # program (repro.core.desreplay.stream_program_np)
+    stream_numpy = True
+
+    def run(self, cfg: GroupConfig, counts: Dict[int, np.ndarray]
+            ) -> Tuple[RunReport, Dict[int, DeliveryLog]]:
+        sim_cfg = DESLoopBackend._lower(cfg, counts)
+        graph = desgraph_mod.simulate(sim_cfg)
+        result = desreplay_mod.replay(graph)
+        return _des_report(self.name, cfg, result, graph.groups)
+
+    def run_batch(self, cfgs: List[GroupConfig],
+                  counts_list: List[Dict[int, np.ndarray]]
+                  ) -> List[Tuple[RunReport, Dict[int, DeliveryLog]]]:
+        """Sequential per-point runs (the DES has no batched program);
+        overrides the inherited compiled grid so grids stay comparable
+        point-for-point with the other backends."""
+        return [self.run(c, k) for c, k in zip(cfgs, counts_list)]
+
+
 # ---------------------------------------------------------------------------
 # Streaming execution — per-round message counts on the stacked substrate
 # ---------------------------------------------------------------------------
@@ -1424,27 +1485,42 @@ class GroupStream:
         be = get_backend(backend)
         if not isinstance(be, GraphBackend):
             raise ValueError(
-                "streaming runs on the stacked graph/pallas substrate; "
-                f"got {getattr(be, 'name', backend)!r}")
+                "streaming runs on the stacked graph/pallas/des "
+                f"substrate; got {getattr(be, 'name', backend)!r}")
         cfg = group.cfg
         if not cfg.subgroups:
             raise ValueError("no subgroups")
         self.group = group
         self.backend = be
+        # des streams round on the host-side numpy mirror of the same
+        # int32 sweep arithmetic (DESIGN.md Sec. 12) — bit-identical
+        # rounds, no compiled program
+        self._numpy = bool(getattr(be, "stream_numpy", False))
         self._n = tuple(len(s.members) for s in cfg.subgroups)
         self._s = tuple(len(s.senders) for s in cfg.subgroups)
         self._w = tuple(s.window for s in cfg.subgroups)
         self.n_max, self.s_max = max(self._n), max(self._s)
         member_masks, sender_masks = _stack_masks(self._n, self._s)
-        self._mask_args: Tuple = () if member_masks is None else (
-            jnp.asarray(member_masks), jnp.asarray(sender_masks))
-        self._program = _stream_program(len(self._n), self.n_max,
-                                        self.s_max, self._w,
-                                        bool(self._mask_args),
-                                        cfg.flags.null_send, be.name)
-        self._states = sweep_mod.batch_states(self.n_max, self.s_max,
-                                              len(self._n))
-        self._backlogs = jnp.zeros((len(self._n), self.s_max), jnp.int32)
+        if self._numpy:
+            self._mask_args: Tuple = () if member_masks is None else (
+                np.asarray(member_masks), np.asarray(sender_masks))
+            self._program = desreplay_mod.stream_program_np(
+                self._w, cfg.flags.null_send)
+            self._states = desreplay_mod.batch_states_np(
+                self.n_max, self.s_max, len(self._n))
+            self._backlogs = np.zeros((len(self._n), self.s_max),
+                                      np.int32)
+        else:
+            self._mask_args = () if member_masks is None else (
+                jnp.asarray(member_masks), jnp.asarray(sender_masks))
+            self._program = _stream_program(len(self._n), self.n_max,
+                                            self.s_max, self._w,
+                                            bool(self._mask_args),
+                                            cfg.flags.null_send, be.name)
+            self._states = sweep_mod.batch_states(self.n_max, self.s_max,
+                                                  len(self._n))
+            self._backlogs = jnp.zeros((len(self._n), self.s_max),
+                                       jnp.int32)
         self._costs = np.stack([_cost_params(cfg, spec)
                                 for spec in cfg.subgroups]).astype(
                                     np.float32)
@@ -1461,7 +1537,8 @@ class GroupStream:
             for g, resent in enumerate(self.carry.resend):
                 backlogs0[g, : len(resent)] = resent
                 self._enqueued[g] += resent.astype(np.int64)
-            self._backlogs = jnp.asarray(backlogs0)
+            self._backlogs = (backlogs0 if self._numpy
+                              else jnp.asarray(backlogs0))
         # running per-sender publish totals, kept host-side so watermark
         # queries (app_publish_index) answer the common "not published
         # yet" case in O(1) instead of re-scanning the round traces
@@ -1547,8 +1624,13 @@ class GroupStream:
                     or x.shape != (g, s_max):
                 raise ValueError("trace rows must be (G, N_max)/"
                                  "(G, S_max) shaped")
-        self._states = jax.tree_util.tree_map(jnp.asarray, states)
-        self._backlogs = jnp.asarray(backlogs, jnp.int32)
+        if self._numpy:
+            self._states = jax.tree_util.tree_map(
+                lambda x: np.asarray(x, np.int32), states)
+            self._backlogs = np.asarray(backlogs, np.int32)
+        else:
+            self._states = jax.tree_util.tree_map(jnp.asarray, states)
+            self._backlogs = jnp.asarray(backlogs, jnp.int32)
         self._batches, self._app_pub, self._nulls = batches, app_pub, \
             nulls
         for p, x in zip(app_pub, nulls):
@@ -1579,7 +1661,8 @@ class GroupStream:
                     f"padded lanes {np.nonzero(ready[g, s_g:])[0] + s_g}")
             self._enqueued[g] += ready[g, :s_g].astype(np.int64)
         (self._states, self._backlogs), (batch, pub, nulls) = \
-            self._program(self._states, self._backlogs, jnp.asarray(ready),
+            self._program(self._states, self._backlogs,
+                          ready if self._numpy else jnp.asarray(ready),
                           *self._mask_args)
         pub, nulls = np.asarray(pub), np.asarray(nulls)
         self._batches.append(np.asarray(batch))
@@ -1850,5 +1933,6 @@ def _sum_delivered(logs: Mapping[int, DeliveryLog]) -> Tuple[int, int]:
 
 
 register_backend("des", DESBackend)
+register_backend("des-loop", DESLoopBackend)
 register_backend("graph", GraphBackend)
 register_backend("pallas", PallasBackend)

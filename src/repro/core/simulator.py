@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import itertools
 import math
 from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -550,12 +551,18 @@ class Simulator:
 
     def run(self) -> SimResult:
         cfg = self.cfg
-        heap = [(0.0, node) for node in range(cfg.n_nodes)
+        # Explicit (time, node, seq) heap key — deterministic tie-break
+        # shared with the two-phase event pass (repro.core.desgraph,
+        # DESIGN.md Sec. 12): same-timestamp pops order by node id, never
+        # by heapq insertion accidents, so permuting subgroup declaration
+        # order cannot reorder the event timeline.
+        seq = itertools.count()
+        heap = [(0.0, node, next(seq)) for node in range(cfg.n_nodes)
                 if self.node_groups[node]]
         heapq.heapify(heap)
         n_live = len(heap)
         while heap and self.sweeps < cfg.max_sweeps:
-            now, node = heapq.heappop(heap)
+            now, node, _ = heapq.heappop(heap)
             if now > cfg.max_time_us:
                 break
             self._drain(node, now)
@@ -585,7 +592,7 @@ class Simulator:
                 if not math.isfinite(nxt):
                     nxt = now + 50 * cfg.idle_tick_us
                 nxt = max(nxt, now + cfg.idle_tick_us)
-            heapq.heappush(heap, (nxt, node))
+            heapq.heappush(heap, (nxt, node, next(seq)))
         return self._result()
 
     def _any_app_pending(self) -> bool:

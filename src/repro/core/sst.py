@@ -245,24 +245,32 @@ def rr_prefix_masked(counts, mask, s_eff) -> Array:
 
     counts: (..., S) integer; mask: (S,) or (..., S) bool, True on the
     first ``s_eff`` slots; s_eff: scalar (traced OK).  Padded slots never
-    extend the prefix and never hold it back.
+    extend the prefix and never hold it back.  Like the unmasked forms,
+    dispatches on the input type (jnp under trace, numpy host-side) so
+    the des stream's numpy round mirror (DESIGN.md Sec. 12) shares the
+    exact trim arithmetic the compiled backends run.
     """
-    big = jnp.iinfo(jnp.asarray(counts).dtype).max
-    m = jnp.min(jnp.where(mask, counts, big), axis=-1, keepdims=True)
+    xp = jnp if isinstance(counts, jax.Array) else np
+    counts = xp.asarray(counts)
+    mask = xp.asarray(mask)
+    big = xp.iinfo(counts.dtype).max
+    m = xp.min(xp.where(mask, counts, big), axis=-1, keepdims=True)
     ge = (counts >= m + 1) & mask
-    run = jnp.cumprod(ge.astype(counts.dtype), axis=-1)
-    extra = jnp.sum(run, axis=-1)
-    return jnp.squeeze(m, -1) * s_eff + extra
+    run = xp.cumprod(ge.astype(counts.dtype), axis=-1)
+    extra = xp.sum(run, axis=-1)
+    return xp.squeeze(m, -1) * s_eff + extra
 
 
 def sender_counts_masked(seq_prefix, s_eff, n_slots: int) -> Array:
     """:func:`sender_counts` with a traced effective sender count, padded
     to ``n_slots`` columns (entries at ranks >= s_eff are meaningless and
-    must be masked by the caller)."""
-    seq_prefix = jnp.asarray(seq_prefix)
+    must be masked by the caller).  xp-dispatched like
+    :func:`rr_prefix_masked`."""
+    xp = jnp if isinstance(seq_prefix, jax.Array) else np
+    seq_prefix = xp.asarray(seq_prefix)
     full = seq_prefix[..., None] // s_eff
     rem = seq_prefix[..., None] % s_eff
-    ranks = jnp.arange(n_slots)
+    ranks = xp.arange(n_slots)
     return full + (ranks < rem)
 
 

@@ -16,6 +16,7 @@ bit-identical for every seed.  ``CHAOS_SEEDS`` (comma-separated)
 overrides the seed set; CI fans one seed per matrix entry.
 """
 
+import dataclasses
 import os
 
 import numpy as np
@@ -298,6 +299,25 @@ def test_chaos_stream_soak_graph_pallas_identical(seed):
     assert g.killed == p.killed and g.joined == p.joined
     assert g.extras == p.extras
     assert g.checks == p.checks > 30
+
+
+@soak
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_des_stream_soak_bit_identical_to_graph(seed):
+    """The two-phase des stream (DESIGN.md Sec. 12) survives the same
+    chaos schedule as graph and produces a bit-identical report — every
+    field except the backend tag, including the delivery-sequence
+    digests in ``extras``."""
+    spec = FaultSpec(rounds=24, suspect_rate=0.25, cascade_prob=0.5,
+                     join_rate=0.15, stall_rate=0.15)
+    reps = {be: chaos_soak(_chaos_group(), spec, seed=seed, backend=be)
+            for be in ("graph", "des")}
+    g = dataclasses.asdict(reps["graph"])
+    d = dataclasses.asdict(reps["des"])
+    assert g.pop("backend") == "graph" and d.pop("backend") == "des"
+    assert g == d
+    assert reps["des"].views_installed >= 1
+    assert reps["des"].checks > 30
 
 
 @soak

@@ -114,7 +114,7 @@ def test_stream_finish_drains_large_backlog():
 def test_stream_and_bind_validate_inputs():
     cfg = api.single_group(3, n_senders=2, n_messages=4)
     with pytest.raises(ValueError, match="graph/pallas"):
-        api.Group(cfg).stream(backend="des")
+        api.Group(cfg).stream(backend="des-loop")
     stream = api.Group(cfg).stream()
     with pytest.raises(ValueError, match="ready must be"):
         stream.step(np.zeros((2, 2), np.int32))
