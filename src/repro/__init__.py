@@ -1,8 +1,6 @@
 """repro — Spindle (RDMA atomic multicast optimizations) as a multi-pod
 JAX training/serving framework.  See README.md and DESIGN.md."""
 
-import os as _os
-
 
 def enable_compilation_cache(path: str) -> None:
     """Point JAX's persistent compilation cache at ``path``.
@@ -15,21 +13,53 @@ def enable_compilation_cache(path: str) -> None:
     cold-start delta is measured by ``benchmarks/hotpath.py``
     (``compile_cache`` row in BENCH_hotpath.json).
 
+    The directory is created if missing (XLA's cache writer does not
+    mkdir for you; a nonexistent dir silently caches nothing).
+
     Zero thresholds so even the sub-second CPU compiles of the test
     shapes are cached — the default thresholds only persist compiles
     over a second, which on the benchmark shapes would cache nothing.
     """
+    import os
+
     import jax
 
+    os.makedirs(path, exist_ok=True)
     jax.config.update("jax_compilation_cache_dir", path)
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
     jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
 
 
-# Opt-in via environment so every entry point (pytest, benchmarks,
-# subprocesses) inherits it without code changes: REPRO_COMPILATION_CACHE
-# names the cache directory; unset/empty leaves JAX's default (off).
-_cache_dir = _os.environ.get("REPRO_COMPILATION_CACHE")
-if _cache_dir:
-    enable_compilation_cache(_cache_dir)
-del _os, _cache_dir
+def _enable_cache_from_env() -> None:
+    """Opt-in via environment so every entry point (pytest, benchmarks,
+    subprocesses) inherits the cache without code changes:
+    ``REPRO_COMPILATION_CACHE`` names the cache directory; unset/empty
+    leaves JAX's default (off).
+
+    The env var is read ONCE, at ``import repro`` — setting it after
+    this module (or jax's cache config) is already loaded cannot take
+    effect, and an explicit ``jax_compilation_cache_dir`` someone
+    already configured wins over the env var.  Both used to be silent;
+    now the losing env var warns once so a "why is nothing cached?" hunt
+    ends here instead of in XLA."""
+    import os
+
+    cache_dir = os.environ.get("REPRO_COMPILATION_CACHE")
+    if not cache_dir:
+        return
+    import jax
+
+    configured = jax.config.jax_compilation_cache_dir
+    if configured and configured != cache_dir:
+        import warnings
+
+        warnings.warn(
+            "REPRO_COMPILATION_CACHE=%r ignored: jax was already "
+            "configured with jax_compilation_cache_dir=%r (explicit "
+            "configuration wins; unset one of them)"
+            % (cache_dir, configured), RuntimeWarning, stacklevel=2)
+        return
+    enable_compilation_cache(cache_dir)
+
+
+_enable_cache_from_env()

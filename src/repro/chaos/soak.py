@@ -292,7 +292,8 @@ def _soak_stream(target, spec: FaultSpec, seed: int,
 # serve soak
 # ---------------------------------------------------------------------------
 
-def _soak_serve(engine, spec: FaultSpec, seed: int) -> ChaosReport:
+def _soak_serve(engine, spec: FaultSpec, seed: int,
+                fused: bool = False) -> ChaosReport:
     rng = np.random.default_rng(seed)
     check = _Checker(seed)
     submitted = [req.rid for eng in engine.engines for req in eng.queue]
@@ -323,14 +324,22 @@ def _soak_serve(engine, spec: FaultSpec, seed: int) -> ChaosReport:
     old_stall = engine.stall_fn
     stall_rounds_set = {r + k for r, ln in stall_at.items()
                         for k in range(ln)}
-
-    def _stall(g, rnd):
-        return (tuple(range(engine._slots[g]))
-                if rnd in stall_rounds_set else ())
-
-    engine.stall_fn = _stall
+    # stall bursts as a precomputed (rounds, G, slots) mask — the form
+    # the fused program scans in-graph (a host closure would force the
+    # per-round loop); the unfused loop reads the same mask, so the two
+    # paths see identical stall sets
+    if stall_rounds_set:
+        b_max = max(engine._slots)
+        stall_mask = np.zeros((max(stall_rounds_set) + 1,
+                               len(engine.engines), b_max), bool)
+        for r in stall_rounds_set:
+            for g, b in enumerate(engine._slots):
+                stall_mask[r, g, :b] = True
+        engine.stall_fn = stall_mask
+    else:
+        engine.stall_fn = None
     try:
-        report = engine.run(fail_at=fail_at)
+        report = engine.run(fail_at=fail_at, fused=fused)
     finally:
         engine.stall_fn = old_stall
     serve = report.extras["serve"]
@@ -404,6 +413,8 @@ def _soak_serve(engine, spec: FaultSpec, seed: int) -> ChaosReport:
             "requeued": serve["requeued_requests"],
             "shed": sorted(shed_rids),
             "fail_at_unreached": serve["fail_at_unreached"],
+            "fused": serve.get("fused", False),
+            "fused_fallback": serve.get("fused_fallback"),
         })
 
 
@@ -514,7 +525,8 @@ def _soak_gradsync(gs, spec: FaultSpec, seed: int) -> ChaosReport:
 # ---------------------------------------------------------------------------
 
 def chaos_soak(target, spec: FaultSpec, *, seed: int = 0,
-               backend: str = "graph") -> ChaosReport:
+               backend: str = "graph",
+               fused: bool = False) -> ChaosReport:
     """Run ``target`` through one seeded fault schedule drawn from
     ``spec`` and assert the plane's invariants after every installed
     view (module docstring lists them per target kind).  ``backend``
@@ -524,7 +536,15 @@ def chaos_soak(target, spec: FaultSpec, *, seed: int = 0,
     their own.  Deterministic: same target shape + spec + seed =>
     same schedule, same report, on every backend that is bit-identical
     (graph vs pallas vs des, whose numpy round mirror replays the same
-    int32 sweep arithmetic — the soak tests assert exactly that)."""
+    int32 sweep arithmetic — the soak tests assert exactly that).
+
+    ``fused=True`` (serve targets only) asks the run for the
+    wedge-capable fused path: schedules whose cuts stay homogeneous run
+    as one device program per membership epoch; heterogeneous draws
+    fall back to the per-round loop with the reason recorded — either
+    way the report is bit-identical, and
+    ``extras['fused']``/``extras['fused_fallback']`` say which path
+    actually ran."""
     from repro.core.gradsync import BucketSyncStream
     if isinstance(target, BucketSyncStream):
         return _soak_gradsync(target, spec, seed)
@@ -533,7 +553,7 @@ def chaos_soak(target, spec: FaultSpec, *, seed: int = 0,
     # lazy: the serve plane pulls in the model zoo
     cls = type(target).__name__
     if cls == "ReplicatedEngine":
-        return _soak_serve(target, spec, seed)
+        return _soak_serve(target, spec, seed, fused=fused)
     raise TypeError(
         f"chaos_soak does not know how to drive a {cls}: expected a "
         "Group, GroupStream, ReplicatedEngine, or BucketSyncStream")

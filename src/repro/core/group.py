@@ -1608,11 +1608,15 @@ class GroupStream:
         :meth:`finish` post-processes through the exact
         :class:`GraphBackend` machinery — a fused run's report and
         delivery logs are the per-round dispatch loop's by construction.
-        Only valid on a fresh stream (no rounds streamed, no epoch
-        carry)."""
-        if self.rounds or self.closed or self.carry is not None:
-            raise RuntimeError("absorb needs a fresh stream (no rounds "
-                               "streamed, no epoch carry)")
+        Only valid on a stream with no rounds streamed yet; an epoch
+        CARRY is fine — the wedge-capable fused serve plane absorbs
+        each post-cut epoch into the reconfigured stream, whose
+        carry-seeded backlog/enqueued state the fused program took as
+        its initial operands (``enqueued`` must then count only the
+        absorbed rounds' events, which add onto the carry seed)."""
+        if self.rounds or self.closed:
+            raise RuntimeError("absorb needs a stream with no rounds "
+                               "streamed (fresh or carry-seeded)")
         g, s_max = self.shape
         batches = [np.asarray(b, np.int64) for b in batches]
         app_pub = [np.asarray(p, np.int64) for p in app_pub]

@@ -39,12 +39,46 @@ class AdmissionPolicy:
     previous round's watermarks, and the per-subgroup SMC windows; it
     returns ``(release, shed)`` counts with ``release + shed <= queued``
     lane-wise.  Implementations may keep state (token buckets); the
-    harness calls them once per round in round order."""
+    harness calls them once per round in round order.
+
+    A policy that can run INSIDE the fused load program (the whole
+    profile as one device scan — DESIGN.md Sec. 6/10) additionally
+    implements the ``fused_key`` / ``device_init`` / ``device_admit``
+    triple: ``device_admit`` is the exact ``admit`` arithmetic lowered
+    to ``jnp`` over an explicit state carry, and ``fused_key`` is the
+    hashable static description the compiled-program cache keys on.
+    The built-in policies all lower; a policy that returns ``None``
+    from :meth:`fused_key` (the default) falls the harness back to the
+    per-round host loop — silently, because the two loops are
+    bit-identical by contract."""
 
     def admit(self, round_no: int, queued: np.ndarray,
               backlog: np.ndarray, windows: np.ndarray
               ) -> Tuple[np.ndarray, np.ndarray]:
         raise NotImplementedError
+
+    def fused_key(self) -> Optional[Tuple]:
+        """Hashable static description for the fused-program cache, or
+        ``None`` when this policy cannot be lowered in-graph."""
+        return None
+
+    def device_init(self, shape: Tuple[int, int]):
+        """Initial ``(G, S)``-shaped device state carry (a jnp pytree;
+        stateless policies return an empty array)."""
+        import jax.numpy as jnp
+        return jnp.zeros((0,), jnp.float32)
+
+    def device_admit(self, state, queued, backlog, windows):
+        """One round of :meth:`admit` in ``jnp`` arithmetic:
+        ``(release, shed, state)`` over int32 lane grids.  Must mirror
+        the host formulas bit-for-bit (the fused/unfused LoadReport
+        equivalence tests gate on it)."""
+        raise NotImplementedError
+
+    def device_commit(self, state) -> None:
+        """Install the post-run device state back onto the host policy
+        (so a policy object reused after a fused run behaves exactly as
+        it would after the host loop).  Stateless policies no-op."""
 
 
 def _clip_decision(release, shed, queued):
@@ -62,6 +96,13 @@ class AdmitAll(AdmissionPolicy):
 
     def admit(self, round_no, queued, backlog, windows):
         return queued.astype(np.int64), np.zeros_like(queued, np.int64)
+
+    def fused_key(self):
+        return ("admit-all",)
+
+    def device_admit(self, state, queued, backlog, windows):
+        import jax.numpy as jnp
+        return queued, jnp.zeros_like(queued), state
 
 
 @dataclasses.dataclass
@@ -93,6 +134,22 @@ class WindowSlack(AdmissionPolicy):
             shed = np.maximum(queued - release - self.queue_cap, 0)
         return _clip_decision(release, shed, queued)
 
+    def fused_key(self):
+        return ("window-slack", self.inflight_limit, self.queue_cap)
+
+    def device_admit(self, state, queued, backlog, windows):
+        import jax.numpy as jnp
+        if self.inflight_limit is not None:
+            limit = jnp.full_like(queued, self.inflight_limit)
+        else:
+            limit = jnp.broadcast_to(2 * windows[:, None], queued.shape)
+        release = jnp.minimum(queued, jnp.maximum(limit - backlog, 0))
+        if self.queue_cap is None:
+            shed = jnp.zeros_like(queued)
+        else:
+            shed = jnp.maximum(queued - release - self.queue_cap, 0)
+        return release, shed, state
+
 
 @dataclasses.dataclass
 class TokenBucket(AdmissionPolicy):
@@ -105,21 +162,52 @@ class TokenBucket(AdmissionPolicy):
     rate: float = 1.0
     burst: float = 8.0
     queue_cap: Optional[int] = 64
+    # float32, matching the fused program's device carry bit-for-bit
+    # (the fused/unfused LoadReport equivalence gates on it)
     _tokens: Optional[np.ndarray] = dataclasses.field(
         default=None, repr=False)
 
     def admit(self, round_no, queued, backlog, windows):
         if self._tokens is None:
-            self._tokens = np.full(queued.shape, float(self.burst))
-        self._tokens = np.minimum(self._tokens + self.rate, self.burst)
+            self._tokens = np.full(queued.shape, np.float32(self.burst),
+                                   np.float32)
+        self._tokens = np.minimum(self._tokens + np.float32(self.rate),
+                                  np.float32(self.burst))
         release = np.minimum(queued, np.floor(self._tokens).astype(
             np.int64))
-        self._tokens = self._tokens - release
+        self._tokens = (self._tokens
+                        - release.astype(np.float32)).astype(np.float32)
         if self.queue_cap is None:
             shed = np.zeros_like(queued)
         else:
             shed = np.maximum(queued - release - self.queue_cap, 0)
         return _clip_decision(release, shed, queued)
+
+    def fused_key(self):
+        return ("token-bucket", float(self.rate), float(self.burst),
+                self.queue_cap)
+
+    def device_init(self, shape):
+        import jax.numpy as jnp
+        if self._tokens is not None:
+            return jnp.asarray(self._tokens, jnp.float32)
+        return jnp.full(shape, jnp.float32(self.burst), jnp.float32)
+
+    def device_admit(self, state, queued, backlog, windows):
+        import jax.numpy as jnp
+        tokens = jnp.minimum(state + jnp.float32(self.rate),
+                             jnp.float32(self.burst))
+        release = jnp.minimum(queued,
+                              jnp.floor(tokens).astype(queued.dtype))
+        tokens = tokens - release.astype(jnp.float32)
+        if self.queue_cap is None:
+            shed = jnp.zeros_like(queued)
+        else:
+            shed = jnp.maximum(queued - release - self.queue_cap, 0)
+        return release, shed, tokens
+
+    def device_commit(self, state) -> None:
+        self._tokens = np.asarray(state, np.float32)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,6 +16,14 @@ generator threaded through a profile's stages yields bit-identical
 matrices on every run, platform, and backend.  ``start`` carries the
 global round offset so phase-dependent generators (diurnal, traces)
 continue seamlessly across stage boundaries.
+
+The matrix form is also what makes the FUSED load and serve paths
+possible (DESIGN.md Sec. 6): because the offered load is a precomputed
+host array rather than a per-round callback, the whole profile can ride
+into one compiled device program as a scan operand — the harness's
+``fused=True`` and the serve plane's ``arrive_schedule`` both lean on
+exactly this property, and it is why arbitrary ``arrive_fn`` callables
+are the one arrival form that still forces the per-round host loop.
 """
 
 from __future__ import annotations

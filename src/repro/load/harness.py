@@ -20,6 +20,22 @@ releasing (no new arrivals) until it empties, then the stream drains
 round traces (:mod:`repro.load.metrics`).  Everything is deterministic
 given (profile, target, policy): graph and pallas produce bit-identical
 reports, and the loadtest benchmark gates on that.
+
+``fused=True`` runs the same accounting off a FUSED device program
+(DESIGN.md Sec. 6/10): the whole profile becomes one ``lax.scan`` over
+the precomputed ``(T, G, S)`` arrival matrices with the admission
+policy's :meth:`~repro.load.admission.AdmissionPolicy.device_admit`
+lowering and the stream round body inlined per step, followed by
+chunked device drain sweeps; per-message FIFO attribution is then
+REPLAYED on the host from the device's release/shed matrices (identical
+arithmetic, so identical queues), and the rounds are absorbed into the
+stream (:meth:`~repro.core.group.GroupStream.absorb`) so
+``finish``/``build_report`` post-process through the exact unfused
+machinery.  The resulting :class:`LoadReport` is bit-identical to the
+per-round loop's by construction — fused runs mark themselves only in
+``run_report.extras['load_fused']``, never in the stage/totals JSON.
+Non-lowerable policies and the des (numpy) stream fall back silently to
+the host loop.
 """
 
 from __future__ import annotations
@@ -55,7 +71,8 @@ def run_profile(target, profile: Profile,
                 backend: str = "graph",
                 settle_max: Optional[int] = None,
                 max_new_tokens: int = 4,
-                prompt_len: int = 2) -> LoadReport:
+                prompt_len: int = 2,
+                fused: bool = False) -> LoadReport:
     """Drive ``target`` open-loop through ``profile`` and account the
     result.  ``admission`` defaults to :class:`AdmitAll` (the
     uncontrolled baseline) on stream targets and must be a
@@ -63,12 +80,16 @@ def run_profile(target, profile: Profile,
     ``backend`` picks the stream substrate when ``target`` is a bare
     ``Group``; ``settle_max`` caps the post-profile drain (capped-off
     messages report as ``undelivered``).  ``max_new_tokens`` /
-    ``prompt_len`` shape the synthetic requests on the serve path."""
+    ``prompt_len`` shape the synthetic requests on the serve path.
+    ``fused=True`` runs the profile through the fused device program
+    (bit-identical report, see the module docstring); it falls back to
+    the host loop when the target or policy cannot be lowered."""
     if hasattr(target, "engines") and hasattr(target, "submit"):
         return _run_serve_profile(target, profile, admission,
                                   settle_max=settle_max,
                                   max_new_tokens=max_new_tokens,
-                                  prompt_len=prompt_len)
+                                  prompt_len=prompt_len,
+                                  fused=fused)
     stream = _resolve_stream(target, backend)
     if stream.rounds or stream.carry is not None:
         raise ValueError(
@@ -85,6 +106,12 @@ def run_profile(target, profile: Profile,
         mask[g, :s_g] = True
     windows = np.asarray(stream.windows, np.int64)
     stage_mats = profile.matrices((g_n, s_max), mask)
+    if fused:
+        report = _run_stream_profile_fused(stream, profile, policy,
+                                           mask, stage_mats,
+                                           settle_max)
+        if report is not None:
+            return report
     pending: List[List[collections.deque]] = [
         [collections.deque() for _ in range(s_max)] for _ in range(g_n)]
     rel_rounds: List[List[List[int]]] = [
@@ -163,11 +190,236 @@ def run_profile(target, profile: Profile,
                         run_report=run_report)
 
 
+def _build_load_programs(policy, g_n, n_max, s_max, windows, null_send,
+                         backend, masked, chunk):
+    """Build the two jitted programs of the fused stream path: the
+    profile scan (one device program for every arrival round) and the
+    drain sweep (a fixed-size chunk of zero-arrival rounds with the host
+    loop's ``idle < 64 and queue nonempty`` gate evaluated in-graph).
+    Each round is the EXACT host round: admission lowering -> clip ->
+    queue arithmetic -> :func:`repro.core.sweep.stream_stacked` — the
+    same scan body the per-round ``GroupStream.step`` dispatches."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.core import sweep as sweep_mod
+
+    ring = max(windows) if backend == "pallas" else 0
+    receive_fn = (group_mod._kernel_receive(ring)
+                  if backend == "pallas" else None)
+    win_arr = np.asarray(windows, np.int32)
+
+    def round_fn(states, backlogs, pend, pol, arr_t, sender_mask,
+                 masks):
+        queued = pend + arr_t
+        bl_prev = jnp.where(sender_mask, backlogs, 0)
+        release, shed, pol = policy.device_admit(
+            pol, queued, bl_prev, jnp.asarray(win_arr))
+        release = jnp.clip(release, 0, queued)
+        shed = jnp.clip(shed, 0, queued - release)
+        pend = queued - release - shed
+        mm, sm = masks if masked else (None, None)
+        (states, backlogs), (batch, pub, nulls) = \
+            sweep_mod.stream_stacked(
+                states, backlogs, release.astype(jnp.int32),
+                windows=win_arr, null_send=null_send,
+                member_masks=mm, sender_masks=sm,
+                receive_fn=receive_fn)
+        bl_now = jnp.where(sender_mask, backlogs, 0)
+        return (states, backlogs, pend, pol,
+                (batch, pub, nulls, release, shed, bl_now))
+
+    def profile_fn(arr, pol0, sender_mask, *masks):
+        group_mod.TRACE_EVENTS.append(
+            ((g_n, n_max, s_max), tuple(windows), backend + "+load"))
+        states = sweep_mod.batch_states(n_max, s_max, g_n)
+        backlogs = jnp.zeros((g_n, s_max), jnp.int32)
+        pend = jnp.zeros((g_n, s_max), jnp.int32)
+
+        def body(carry, arr_t):
+            states, backlogs, pend, pol = carry
+            states, backlogs, pend, pol, ys = round_fn(
+                states, backlogs, pend, pol, arr_t, sender_mask, masks)
+            return (states, backlogs, pend, pol), ys
+
+        return lax.scan(body, (states, backlogs, pend, pol0), arr)
+
+    def drain_fn(states, backlogs, pend, pol, idle, sender_mask,
+                 *masks):
+        group_mod.TRACE_EVENTS.append(
+            ((g_n, n_max, s_max), tuple(windows), backend + "+drain"))
+        zero = jnp.zeros((g_n, s_max), jnp.int32)
+
+        def body(carry, _):
+            states, backlogs, pend, pol, idle, t = carry
+            live = (idle < 64) & (pend.sum() > 0)
+            ns, nb, npend, npol, ys = round_fn(
+                states, backlogs, pend, pol, zero, sender_mask, masks)
+            _, _, _, release, shed, _ = ys
+            prog = (release.sum() + shed.sum()) > 0
+            nidle = jnp.where(prog, 0, idle + 1)
+
+            def sel(a, b):
+                return jnp.where(live, a, b)
+
+            states = jax.tree_util.tree_map(sel, ns, states)
+            backlogs = sel(nb, backlogs)
+            pend = sel(npend, pend)
+            pol = jax.tree_util.tree_map(sel, npol, pol)
+            idle = jnp.where(live, nidle, idle)
+            t = jnp.where(live, t + 1, t)
+            ys = jax.tree_util.tree_map(
+                lambda y: jnp.where(live, y, jnp.zeros_like(y)), ys)
+            return (states, backlogs, pend, pol, idle, t), ys
+
+        t0 = jnp.asarray(0, jnp.int32)
+        carry = (states, backlogs, pend, pol, idle, t0)
+        return lax.scan(body, carry, None, length=chunk)
+
+    return jax.jit(profile_fn), jax.jit(drain_fn)
+
+
+_DRAIN_CHUNK = 128
+
+
+def _run_stream_profile_fused(stream, profile: Profile,
+                              policy: AdmissionPolicy,
+                              mask: np.ndarray,
+                              stage_mats: List[np.ndarray],
+                              settle_max: Optional[int]
+                              ) -> Optional[LoadReport]:
+    """The fused stream path: profile scan + drain chunks on device,
+    FIFO attribution replayed on host from the device release/shed
+    matrices, rounds absorbed into the stream so finish/build_report run
+    the unfused machinery verbatim.  Returns None (silent fallback to
+    the host loop) when the stream is the des numpy mirror or the policy
+    has no device lowering."""
+    if stream._numpy or policy.fused_key() is None:
+        return None
+    import jax.numpy as jnp
+
+    g_n, s_max = stream.shape
+    arr = np.concatenate(stage_mats, axis=0).astype(np.int32)
+    t_prof = arr.shape[0]
+    backend = stream.backend.name
+    null_send = stream.group.cfg.flags.null_send
+    masked = bool(stream._mask_args)
+    key = ("load-fused", g_n, stream.n_max, s_max,
+           tuple(stream.windows), null_send, backend, masked,
+           t_prof, _DRAIN_CHUNK, policy.fused_key())
+    profile_prog, drain_prog = group_mod.fused_stream_program(
+        key, lambda: _build_load_programs(
+            policy, g_n, stream.n_max, s_max, tuple(stream.windows),
+            null_send, backend, masked, _DRAIN_CHUNK))
+    sender_mask_dev = jnp.asarray(mask)
+    pol0 = policy.device_init((g_n, s_max))
+    (states, backlogs, pend, pol), ys = profile_prog(
+        jnp.asarray(arr), pol0, sender_mask_dev, *stream._mask_args)
+    rows = [np.asarray(y) for y in ys]
+    batches = list(rows[0])
+    pubs = list(rows[1])
+    nulls_l = list(rows[2])
+    rel_l = list(rows[3])
+    shed_l = list(rows[4])
+    bl_l = list(rows[5])
+    idle = jnp.asarray(0, jnp.int32)
+    device_calls = 1
+    while (int(np.asarray(idle)) < 64
+           and int(np.asarray(pend).sum()) > 0):
+        (states, backlogs, pend, pol, idle, t_c), dys = drain_prog(
+            states, backlogs, pend, pol, idle, sender_mask_dev,
+            *stream._mask_args)
+        device_calls += 1
+        t_c = int(np.asarray(t_c))
+        drows = [np.asarray(y)[:t_c] for y in dys]
+        batches += list(drows[0])
+        pubs += list(drows[1])
+        nulls_l += list(drows[2])
+        rel_l += list(drows[3])
+        shed_l += list(drows[4])
+        bl_l += list(drows[5])
+        if t_c < _DRAIN_CHUNK:
+            break
+    policy.device_commit(pol)
+
+    # host replay of the per-message FIFO attribution: same queues, same
+    # pops, driven by the device's release/shed counts instead of a
+    # policy call — depths and stage tallies land exactly where the
+    # host loop puts them
+    tallies: List[StageTally] = [
+        StageTally(name=st.name, rounds=st.rounds, scale=st.scale)
+        for st in profile.stages]
+    pending: List[List[collections.deque]] = [
+        [collections.deque() for _ in range(s_max)] for _ in range(g_n)]
+    rel_rounds: List[List[List[int]]] = [
+        [[] for _ in range(s_max)] for _ in range(g_n)]
+    rel_stages: List[List[List[int]]] = [
+        [[] for _ in range(s_max)] for _ in range(g_n)]
+    t_global = 0
+
+    def apply_round(tally: StageTally):
+        nonlocal t_global
+        rel, sh = rel_l[t_global], shed_l[t_global]
+        for g, s in zip(*np.nonzero(rel)):
+            for _ in range(int(rel[g, s])):
+                a_rnd, a_stage = pending[g][s].popleft()
+                rel_rounds[g][s].append(a_rnd)
+                rel_stages[g][s].append(a_stage)
+                tallies[a_stage].released += 1
+        for g, s in zip(*np.nonzero(sh)):
+            for _ in range(int(sh[g, s])):
+                _, a_stage = pending[g][s].pop()  # tail drop: newest
+                tallies[a_stage].shed += 1
+        depth = int(sum(len(q) for row in pending for q in row))
+        tally.max_queue_depth = max(tally.max_queue_depth, depth)
+        bl = int(bl_l[t_global].sum())
+        tally.max_stream_backlog = max(tally.max_stream_backlog, bl)
+        t_global += 1
+
+    for si, (stage, mat) in enumerate(zip(profile.stages, stage_mats)):
+        tally = tallies[si]
+        for t in range(stage.rounds):
+            a = mat[t]
+            tally.offered += int(a.sum())
+            for g, s in zip(*np.nonzero(a)):
+                pending[g][s].extend([(t_global, si)] * int(a[g, s]))
+            apply_round(tally)
+        tally.end_queue_depth = int(
+            sum(len(q) for row in pending for q in row))
+    while t_global < len(rel_l):
+        apply_round(tallies[-1])
+    tallies[-1].end_queue_depth = int(
+        sum(len(q) for row in pending for q in row))
+
+    total_rel = (np.sum(np.stack(rel_l), axis=0) if rel_l
+                 else np.zeros((g_n, s_max), np.int64))
+    stream.absorb(states, backlogs, batches, pubs, nulls_l,
+                  [total_rel[g].astype(np.int64) for g in range(g_n)])
+    run_report, _logs = stream.finish(settle_max=settle_max)
+    batches_t, app_pub_t, nulls_t = stream.traces()
+    released = [[(np.asarray(rel_rounds[g][s], np.int64),
+                  np.asarray(rel_stages[g][s], np.int64))
+                 for s in range(s_max)] for g in range(g_n)]
+    report = build_report(batches=batches_t, app_pub=app_pub_t,
+                          nulls=nulls_t, costs=stream.cost_params,
+                          n_members=stream.n_members,
+                          n_senders=stream.n_senders,
+                          released=released, tallies=tallies,
+                          run_report=run_report)
+    if run_report is not None:
+        run_report.extras["load_fused"] = {
+            "rounds": len(batches), "profile_rounds": t_prof,
+            "drain_rounds": len(batches) - t_prof,
+            "device_calls": device_calls}
+    return report
+
+
 def _run_serve_profile(rep, profile: Profile,
                        admission: Optional[ServeAdmission], *,
                        settle_max: Optional[int],
-                       max_new_tokens: int, prompt_len: int
-                       ) -> LoadReport:
+                       max_new_tokens: int, prompt_len: int,
+                       fused: bool = False) -> LoadReport:
     """The serve-plane lowering: arrival lanes are KV slots, per-round
     lane sums become request arrivals per replica; latency is request
     submit -> finish in engine rounds (the decode loop has no
@@ -203,9 +455,9 @@ def _run_serve_profile(rep, profile: Profile,
                     max_new_tokens=max_new_tokens))
                 rid += 1
     run_report = rep.run(
-        arrive_fn=lambda g, rnd: schedule[rnd][g],
+        arrive_schedule=schedule,
         arrive_rounds=total_rounds, admission=admission,
-        settle_max=settle_max,
+        settle_max=settle_max, fused=fused,
         max_rounds=total_rounds + 10_000)
     bounds = profile.stage_bounds()
 

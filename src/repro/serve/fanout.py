@@ -90,7 +90,10 @@ class ReplicatedEngine:
     response loggers — the processes that must observe the replica's
     admission+token stream in total order).  ``stall_fn(g, round)`` names
     the slots of replica ``g`` whose client is backpressured that engine
-    round.  ``window`` is the per-slot SMC ring window: how many
+    round; a precomputed boolean ``(rounds, G, slots)`` ndarray is also
+    accepted — that form stays on the fused path (a callable falls back,
+    see :mod:`repro.serve.fused`).  ``window`` is the per-slot SMC ring
+    window: how many
     undelivered messages a slot may have in flight before the send
     predicate throttles it.
     """
@@ -336,6 +339,8 @@ class ReplicatedEngine:
             settle_max: Optional[int] = None,
             fail_at: Optional[Mapping[int, Sequence[int]]] = None,
             arrive_fn: Optional[ArriveFn] = None,
+            arrive_schedule: Optional[Sequence[Sequence[
+                Sequence[Request]]]] = None,
             arrive_rounds: int = 0,
             admission: Optional[ServeAdmission] = None,
             fused: bool = False
@@ -343,14 +348,25 @@ class ReplicatedEngine:
         """Drive every replica to drain, one multicast round per engine
         round, then settle the multicast and return the merged report.
 
-        ``fused=True`` executes the whole run as ONE compiled device
-        program — decode, multicast sweep, watermark-gated slot reuse
-        and the settle drain all inside a single ``lax.while_loop``
-        (:mod:`repro.serve.fused`), with zero host round-trips between
-        rounds (``extras["serve"]["host_hops"] == 0``).  Workloads the
-        fused program cannot express — view changes, open-loop
-        arrivals, stalls, admission policies, heterogeneous replicas —
-        fall back to this per-round loop EXPLICITLY:
+        ``fused=True`` executes the whole run as one compiled device
+        program PER MEMBERSHIP EPOCH — decode, multicast sweep,
+        watermark-gated slot reuse, open-loop arrivals, admission
+        shed/stalls, stall schedules and the settle drain all inside a
+        ``lax.while_loop`` (:mod:`repro.serve.fused`), with zero host
+        round-trips between cuts
+        (``extras["serve"]["host_hops"] == 0``).  ``fail_at`` wedges
+        the fused loop at the failure round, performs the SAME host-side
+        cut as this loop (:meth:`_fail_nodes`), and re-enters a fused
+        program for the next epoch with the carry resend as its initial
+        backlog — one cut = two device programs.  Precomputed dynamics
+        stay fused: ``arrive_schedule`` (per-round request matrices),
+        boolean ``(rounds, G, slots)`` ``stall_fn`` arrays, and
+        :class:`~repro.load.admission.ServeAdmission` policies all
+        lower to carry arithmetic.  Only what genuinely needs Python
+        mid-round falls back to this per-round loop EXPLICITLY —
+        arbitrary ``arrive_fn``/``stall_fn`` callables, ``settle_max``,
+        heterogeneous replicas, and cuts that leave replicas with
+        unequal slot/subscriber counts:
         ``extras["serve"]["fused"]`` is False and
         ``extras["serve"]["fused_fallback"]`` names the reason.
 
@@ -397,26 +413,49 @@ class ReplicatedEngine:
         (the engines drained first — e.g. an earlier cut re-admitted
         work sooner) are NOT an error: they surface in
         ``extras["serve"]["fail_at_unreached"]``."""
+        if arrive_schedule is not None and arrive_fn is not None:
+            raise ValueError(
+                "arrive_schedule and arrive_fn are mutually exclusive: "
+                "a schedule IS the precomputed form of the callback")
+        if arrive_schedule is not None and arrive_rounds <= 0:
+            arrive_rounds = len(arrive_schedule)
+        fail_at = {int(r): _as_waves(spec)
+                   for r, spec in (fail_at or {}).items()}
+        fail_at = {r: w for r, w in fail_at.items() if w}
         fused_fallback: Optional[str] = None
         if fused:
             from repro.serve import fused as fused_mod
             fused_fallback = fused_mod.fused_fallback_reason(
                 self, fail_at=fail_at, arrive_fn=arrive_fn,
-                admission=admission, settle_max=settle_max)
+                arrive_schedule=arrive_schedule, admission=admission,
+                settle_max=settle_max)
             if fused_fallback is None:
                 try:
-                    report = fused_mod.run_fused(self,
-                                                 max_rounds=max_rounds)
+                    report = fused_mod.run_fused(
+                        self, max_rounds=max_rounds, fail_at=fail_at,
+                        arrive_schedule=arrive_schedule,
+                        arrive_rounds=arrive_rounds,
+                        admission=admission)
                 except fused_mod.FusedUnsupported as e:
                     report, fused_fallback = None, str(e)
                 if report is not None:
                     return report
                 fused_fallback = fused_fallback or (
                     "run overflowed the fused round budget")
+        # unfused path: a precomputed schedule / stall mask is just the
+        # tabulated form of the callback — synthesize the callables so
+        # both paths consume the identical workload description
+        if arrive_schedule is not None:
+            sched = [list(row) for row in arrive_schedule]
+            arrive_fn = (lambda g, rnd:
+                         sched[rnd][g] if rnd < len(sched) else ())
+        stall_fn = self.stall_fn
+        if isinstance(stall_fn, np.ndarray):
+            stall_arr = stall_fn.astype(bool)
+            stall_fn = (lambda g, rnd:
+                        np.nonzero(stall_arr[rnd, g])[0]
+                        if rnd < stall_arr.shape[0] else ())
         self._reset_run_state()
-        fail_at = {int(r): _as_waves(spec)
-                   for r, spec in (fail_at or {}).items()}
-        fail_at = {r: w for r, w in fail_at.items() if w}
         bound = self.domain.bind(backend=self.backend)
         wall0 = time.perf_counter()
         # serve metrics are per-RUN deltas: engines accumulate completed
@@ -445,8 +484,8 @@ class ReplicatedEngine:
                 sum(len(eng.queue) for eng in self.engines))
             counts_by_topic = {}
             for g, eng in enumerate(self.engines):
-                stalled = set(self.stall_fn(g, round_no)) \
-                    if self.stall_fn else set()
+                stalled = set(int(s) for s in stall_fn(g, round_no)) \
+                    if stall_fn is not None else set()
                 if (admission is not None
                         and admission.stall_backlog is not None
                         and self._last_view is not None):

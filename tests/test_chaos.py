@@ -369,22 +369,21 @@ def test_chaos_serve_soak_graph_pallas_identical(seed):
 
 @soak
 @pytest.mark.parametrize("seed", CHAOS_SEEDS)
-def test_chaos_fused_serve_falls_back_explicitly(seed):
-    """The fused serve path under chaos: a mid-run SUBSCRIBER failure is
-    a view change, which the one-program fused run cannot express — the
-    run must complete through the per-round loop AND say so
-    (``extras["serve"]["fused"]`` False, ``fused_fallback`` naming the
-    reason), with results identical to asking for the loop directly."""
+def test_chaos_fused_serve_real_wedge(seed):
+    """The fused serve path under chaos: a HOMOGENEOUS mid-run cut (one
+    slot node per replica) WEDGES the fused program, performs the cut
+    on host, and re-enters a second fused program — two device
+    programs, no fallback, zero host hops between cuts — bit-identical
+    to the per-round loop.  A heterogeneous cut (a single replica's
+    subscriber) still falls back, explicitly."""
     from test_viewchange import _fan_engines
     from repro.serve.engine import Request
     from repro.serve.fanout import ReplicatedEngine
 
     engines, mcfg = _fan_engines()
     fail_round = 1 + seed % 3
-    # replica 0's nodes: slots 0-1, subscribers 2-3 (two per replica)
-    fail_at = {fail_round: [2]}
-    results = {}
-    for fused in (False, True):
+
+    def drive(fused, fail_nodes):
         rep_eng = ReplicatedEngine(engines, subscribers_per_replica=2,
                                    window=4, backend="graph")
         rep_eng.reset()
@@ -396,13 +395,79 @@ def test_chaos_fused_serve_falls_back_explicitly(seed):
                     prompt=rng.integers(0, mcfg.vocab_size, 3,
                                         dtype=np.int32),
                     max_new_tokens=4))
+        fail_at = {fail_round: fail_nodes(rep_eng)}
         report = rep_eng.run(fail_at=fail_at, fused=fused)
-        results[fused] = (rep_eng.completed(), report)
-    serve = results[True][1].extras["serve"]
-    assert serve["fused"] is False
-    assert "fail_at" in serve["fused_fallback"]
+        return rep_eng.completed(), report
+
+    def homogeneous(rep_eng):
+        # slot 1's node of EVERY replica: replicas stay equal-shaped
+        return [rep_eng._slot_nodes[0][1], rep_eng._slot_nodes[1][1]]
+
+    done_u, rep_u = drive(False, homogeneous)
+    done_f, rep_f = drive(True, homogeneous)
+    serve = rep_f.extras["serve"]
+    assert serve["fused"] is True, serve.get("fused_fallback")
+    assert serve["fused_epochs"] == 2
+    assert serve["host_hops"] == 0
     assert serve["view_changes"] == 1
     assert serve["drained"]
-    assert results[True][0] == results[False][0]
-    assert serve["engine_rounds"] == \
-        results[False][1].extras["serve"]["engine_rounds"]
+    assert done_f == done_u
+    su = rep_u.extras["serve"]
+    for k in ("engine_rounds", "view_changes", "voided_requests",
+              "requeued_requests", "slot_failures",
+              "fail_at_unreached"):
+        assert su[k] == serve[k], (k, su[k], serve[k])
+
+    # replica 0's nodes: slots 0-1, subscribers 2-3; killing ONE
+    # replica's subscriber leaves heterogeneous replicas -> explicit
+    # per-round fallback with identical results
+    done_hu, rep_hu = drive(False, lambda r: [2])
+    done_hf, rep_hf = drive(True, lambda r: [2])
+    s_het = rep_hf.extras["serve"]
+    assert s_het["fused"] is False
+    assert "fail_at" in s_het["fused_fallback"]
+    assert s_het["view_changes"] == 1
+    assert done_hf == done_hu
+
+
+@soak
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_soak_fused_leg_bit_identical(seed):
+    """chaos_soak(fused=True) drives the real fused wedge when the
+    drawn schedule is expressible and falls back otherwise — either
+    way the ChaosReport matches the unfused soak except for the
+    path-marker keys."""
+    from test_viewchange import _fan_engines
+    from repro.serve.engine import Request
+    from repro.serve.fanout import ReplicatedEngine
+
+    engines, mcfg = _fan_engines()
+    spec = FaultSpec(rounds=14, suspect_rate=0.2, cascade_prob=0.5,
+                     slot_kill_rate=0.2, stall_rate=0.1)
+    reps = {}
+    for fused in (False, True):
+        rep_eng = ReplicatedEngine(engines, subscribers_per_replica=2,
+                                   window=4, backend="graph")
+        rep_eng.reset()
+        rng = np.random.default_rng(3)
+        for g in range(2):
+            for i in range(3):
+                rep_eng.submit(g, Request(
+                    rid=g * 10 + i,
+                    prompt=rng.integers(0, mcfg.vocab_size, 3,
+                                        dtype=np.int32),
+                    max_new_tokens=4))
+        reps[fused] = chaos_soak(rep_eng, spec, seed=seed, fused=fused)
+    u, f = reps[False], reps[True]
+    strip = ("fused", "fused_fallback")
+    assert {k: v for k, v in u.extras.items() if k not in strip} == \
+        {k: v for k, v in f.extras.items() if k not in strip}
+    assert u.killed == f.killed
+    assert u.views_installed == f.views_installed
+    assert u.rounds == f.rounds
+    assert u.stall_rounds == f.stall_rounds
+    if f.extras["fused_fallback"] is not None:
+        # a fallback must name an inexpressible schedule, not a retired
+        # reason (arrivals/stalls/admission/homogeneous cuts all fuse)
+        assert "heterogeneous" in f.extras["fused_fallback"] \
+            or "overflow" in f.extras["fused_fallback"]

@@ -228,3 +228,52 @@ def test_run_batch_rejects_mismatched_grid_lengths():
     with pytest.raises(ValueError):
         api.Group(_cfg()).run_batch(backend="graph", windows=[4, 8],
                                     null_send=[True])
+
+
+# ---------------------------------------------------------------------------
+# persistent compilation cache: env opt-in (repro.__init__)
+# ---------------------------------------------------------------------------
+
+def _run_py(code, env_extra):
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    import repro
+
+    src = str(pathlib.Path(repro.__file__).resolve().parents[1])
+    env = dict(os.environ)
+    env.pop("REPRO_COMPILATION_CACHE", None)
+    env["PYTHONPATH"] = src
+    env.update(env_extra)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    return out
+
+
+def test_compilation_cache_env_creates_missing_dir(tmp_path):
+    cache = str(tmp_path / "cc" / "nested")
+    _run_py(
+        "import os, jax, repro\n"
+        f"assert os.path.isdir({cache!r}), 'cache dir not created'\n"
+        f"assert jax.config.jax_compilation_cache_dir == {cache!r}\n",
+        {"REPRO_COMPILATION_CACHE": cache})
+
+
+def test_compilation_cache_env_warns_when_jax_already_configured(
+        tmp_path):
+    mine = str(tmp_path / "mine")
+    theirs = str(tmp_path / "theirs")
+    _run_py(
+        "import warnings, jax\n"
+        f"jax.config.update('jax_compilation_cache_dir', {theirs!r})\n"
+        "with warnings.catch_warnings(record=True) as w:\n"
+        "    warnings.simplefilter('always')\n"
+        "    import repro\n"
+        "assert any('REPRO_COMPILATION_CACHE' in str(x.message)\n"
+        "           for x in w), [str(x.message) for x in w]\n"
+        "# explicit configuration wins; the env var must not clobber it\n"
+        f"assert jax.config.jax_compilation_cache_dir == {theirs!r}\n",
+        {"REPRO_COMPILATION_CACHE": mine})

@@ -329,3 +329,97 @@ def test_soak_trace_growth_bounded_across_stages():
     run_profile(_group(window=8), prof,
                 WindowSlack(inflight_limit=16, queue_cap=32))
     assert len(api.trace_snapshot()) == before
+
+
+# ---------------------------------------------------------------------------
+# fused profile runs: bit-identical LoadReports off the device program
+# ---------------------------------------------------------------------------
+
+def _small_profile(seed=0):
+    return staged_ramp(Poisson(rate=0.5), warmup=6, steps=(1.0,),
+                       rounds_per_stage=8, overload=4.0,
+                       overload_rounds=8, seed=seed)
+
+
+@fast
+@pytest.mark.parametrize("backend", ["graph", "pallas"])
+@pytest.mark.parametrize("policy", ["admit-all", "window-slack",
+                                    "token-bucket"])
+def test_fused_profile_loadreport_bit_identical(backend, policy):
+    """fused=True runs the whole profile as one device scan plus drain
+    chunks; the LoadReport JSON must equal the host loop's byte-for-byte
+    for every lowerable policy, on both stacked backends."""
+    mk = {"admit-all": lambda: AdmitAll(),
+          "window-slack": lambda: WindowSlack(queue_cap=8),
+          "token-bucket": lambda: TokenBucket(rate=0.7, burst=4.0,
+                                              queue_cap=8)}[policy]
+    ru = run_profile(_group(), _small_profile(), mk(), backend=backend)
+    rf = run_profile(_group(), _small_profile(), mk(), backend=backend,
+                     fused=True)
+    lf = rf.run_report.extras.get("load_fused")
+    assert lf, "profile did not take the fused path"
+    assert lf["profile_rounds"] == _small_profile().total_rounds
+    assert ru.json_str() == rf.json_str()
+
+
+@fast
+def test_fused_profile_bursty_arrivals_bit_identical():
+    prof = staged_ramp(OnOff(rate_on=2.5, p_on_off=0.2, p_off_on=0.3),
+                       warmup=6, steps=(1.0,), rounds_per_stage=8,
+                       overload=3.0, overload_rounds=8, seed=4)
+    ru = run_profile(_group(), prof, WindowSlack(queue_cap=6))
+    rf = run_profile(_group(), prof, WindowSlack(queue_cap=6),
+                     fused=True)
+    assert rf.run_report.extras.get("load_fused")
+    assert ru.json_str() == rf.json_str()
+
+
+@fast
+def test_fused_profile_token_bucket_state_carries_like_host():
+    """A fused run leaves the policy's token state exactly where the
+    host loop would (device_commit), so reuse behaves identically."""
+    pu = TokenBucket(rate=0.6, burst=3.0, queue_cap=8)
+    pf = TokenBucket(rate=0.6, burst=3.0, queue_cap=8)
+    run_profile(_group(), _small_profile(), pu)
+    run_profile(_group(), _small_profile(), pf, fused=True)
+    assert pu._tokens is not None and pf._tokens is not None
+    assert pu._tokens.dtype == pf._tokens.dtype == np.float32
+    np.testing.assert_array_equal(pu._tokens, pf._tokens)
+
+
+@fast
+def test_fused_profile_falls_back_silently():
+    """Non-lowerable policies and the des numpy stream keep the host
+    loop — same report, no load_fused marker."""
+    class HostOnly(AdmitAll):
+        def fused_key(self):
+            return None
+
+    r1 = run_profile(_group(), _small_profile(), HostOnly(), fused=True)
+    r2 = run_profile(_group(), _small_profile(), HostOnly())
+    assert "load_fused" not in r1.run_report.extras
+    assert r1.json_str() == r2.json_str()
+    rdes_f = run_profile(_group(), _small_profile(), AdmitAll(),
+                         backend="des", fused=True)
+    rdes_u = run_profile(_group(), _small_profile(), AdmitAll(),
+                         backend="des")
+    assert "load_fused" not in rdes_f.run_report.extras
+    assert rdes_f.json_str() == rdes_u.json_str()
+
+
+@fast
+def test_serve_target_fused_loadreport_bit_identical():
+    """run_profile(rep, ..., fused=True) drives the wedge-capable fused
+    serve loop (zero host hops) and reproduces the unfused LoadReport
+    byte-for-byte."""
+    prof = Profile(arrivals=Poisson(rate=0.4), seed=9,
+                   stages=(Stage("warm", 6, 0.5),
+                           Stage("load", 8, 2.0)))
+    ru = run_profile(_replicated(), prof, ServeAdmission(queue_cap=3))
+    rf = run_profile(_replicated(), prof, ServeAdmission(queue_cap=3),
+                     fused=True)
+    sf = rf.run_report.extras["serve"]
+    assert sf["fused"] is True, sf.get("fused_fallback")
+    assert sf["host_hops"] == 0
+    assert ru.run_report.extras["serve"]["host_hops"] > 0
+    assert ru.json_str() == rf.json_str()

@@ -204,3 +204,194 @@ def test_fused_serves_recurrent_family():
                  new_tokens=4)
     r_f = rep_f.run(fused=True)
     _assert_conformant(rep_u, r_u, rep_f, r_f)
+
+
+# ---------------------------------------------------------------------------
+# dynamic workloads ride the fused program: arrivals + admission + stalls
+# ---------------------------------------------------------------------------
+
+from repro.load.admission import ServeAdmission  # noqa: E402
+from repro.serve import fused as fused_mod  # noqa: E402
+
+
+def _schedule(replicas=2, rounds=8, seed=3, kind="poisson", rate=0.8):
+    """Seeded open-loop arrival schedule: per-round per-replica request
+    cells, the precomputed form the fused program scans in-graph."""
+    rng = np.random.default_rng(seed)
+    sched, rid = [], 100
+    for _t in range(rounds):
+        row = []
+        for _g in range(replicas):
+            if kind == "poisson":
+                k = int(rng.poisson(rate))
+            else:                       # bursty: idle or a 3-burst
+                k = 3 * int(rng.random() < 0.3)
+            cell = []
+            for _ in range(k):
+                cell.append(Request(
+                    rid=rid,
+                    prompt=rng.integers(1, _DENSE.vocab_size,
+                                        size=3).astype(np.int32),
+                    max_new_tokens=4))
+                rid += 1
+            row.append(cell)
+        sched.append(row)
+    return sched
+
+
+@fast
+@pytest.mark.parametrize("backend,kind", [
+    ("graph", "poisson"), ("pallas", "poisson"), ("graph", "bursty")])
+def test_fused_dynamic_workload_bit_identical(backend, kind):
+    """Open-loop arrivals + ServeAdmission (queue-cap sheds, watermark
+    stalls) + a scheduled stall mask all run IN-GRAPH and reproduce the
+    per-round loop bit-for-bit — the retired fallback reasons of
+    ISSUE 10."""
+    stall = np.zeros((8, 2, 2), bool)
+    stall[2, 0, 1] = True
+    stall[3, 1, 0] = True
+    adm = ServeAdmission(queue_cap=2, stall_backlog=6)
+
+    def mk():
+        r = _rep("serve-fused-test", _DENSE, reqs=2, backend=backend)
+        r.stall_fn = stall
+        return r
+
+    rep_u = mk()
+    r_u = rep_u.run(arrive_schedule=_schedule(kind=kind), admission=adm)
+    rep_f = mk()
+    r_f = rep_f.run(arrive_schedule=_schedule(kind=kind), admission=adm,
+                    fused=True)
+    assert rep_u.shed_log == rep_f.shed_log
+    assert rep_u.submit_rounds == rep_f.submit_rounds
+    su, sf = r_u.extras["serve"], r_f.extras["serve"]
+    for k in ("stall_rounds", "shed_requests", "max_queue_depth",
+              "max_backlog"):
+        assert su[k] == sf[k], (k, su[k], sf[k])
+    _assert_conformant(rep_u, r_u, rep_f, r_f)
+
+
+@fast
+def test_fused_dynamics_do_not_fall_back():
+    """The retired reasons return None from fused_fallback_reason."""
+    rep = _rep("serve-fused-test", _DENSE, slots=3, reqs=4)
+    rep.stall_fn = np.zeros((4, 2, 3), bool)
+    cut = {3: [[rep._slot_nodes[0][1], rep._slot_nodes[1][1]]]}
+    assert fused_mod.fused_fallback_reason(
+        rep, fail_at=cut, arrive_schedule=_schedule(rounds=2),
+        admission=ServeAdmission(queue_cap=2, stall_backlog=4)) is None
+    # arbitrary host callbacks still fall back, explicitly
+    assert "arrive_fn" in fused_mod.fused_fallback_reason(
+        rep, arrive_fn=lambda g, rnd: ())
+
+
+# ---------------------------------------------------------------------------
+# wedge-capable fused loop: one cut = two device programs
+# ---------------------------------------------------------------------------
+
+
+def _cut_rep():
+    return _rep("serve-fused-test", _DENSE, slots=3, reqs=4)
+
+
+def _homogeneous_cut(rep):
+    # one slot node per replica at round 3: both replicas stay 2-slot
+    return {3: [rep._slot_nodes[0][1], rep._slot_nodes[1][1]]}
+
+
+@fast
+def test_fused_mid_run_cut_matches_unfused_fail_at():
+    rep_u = _cut_rep()
+    r_u = rep_u.run(fail_at=_homogeneous_cut(rep_u))
+    rep_f = _cut_rep()
+    r_f = rep_f.run(fail_at=_homogeneous_cut(rep_f), fused=True)
+    sf = r_f.extras["serve"]
+    assert sf["fused_epochs"] == 2
+    su = r_u.extras["serve"]
+    for k in ("view_changes", "slot_failures", "voided_requests",
+              "requeued_requests", "fail_at_unreached"):
+        assert su[k] == sf[k], (k, su[k], sf[k])
+    # per-epoch closing logs match the unfused view_log entry-for-entry
+    assert len(rep_u.view_log) == len(rep_f.view_log)
+    for (ru_rnd, _vu, ru_rep, ru_logs), (rf_rnd, _vf, rf_rep, rf_logs) \
+            in zip(rep_u.view_log, rep_f.view_log):
+        assert ru_rnd == rf_rnd
+        assert ru_rep.delivered_app_msgs == rf_rep.delivered_app_msgs
+        assert _logs_equal(ru_logs, rf_logs)
+    assert ([r["voided_rid"] for r in rep_u.slot_failures]
+            == [r["voided_rid"] for r in rep_f.slot_failures])
+    _assert_conformant(rep_u, r_u, rep_f, r_f)
+
+
+@fast
+def test_fused_cut_reuses_programs_when_shapes_repeat():
+    rep = _cut_rep()
+    rep.run(fail_at=_homogeneous_cut(rep), fused=True)  # cold: traces
+    rep2 = _cut_rep()
+    n0 = len(group_mod.TRACE_EVENTS)
+    r = rep2.run(fail_at=_homogeneous_cut(rep2), fused=True)
+    assert r.extras["serve"]["fused_epochs"] == 2
+    assert len(group_mod.TRACE_EVENTS) - n0 == 0, \
+        "shape-preserving cut re-traced a fused epoch program"
+
+
+# ---------------------------------------------------------------------------
+# per-run extras deltas (the stale-maxima regression of ISSUE 10)
+# ---------------------------------------------------------------------------
+
+
+@fast
+def test_fused_second_run_reports_per_run_maxima():
+    """extras['serve'] maxima must cover THIS run only: a light run
+    after a heavy one on the same engines must not inherit the heavy
+    run's queue-depth/backlog peaks."""
+    def drive(fused):
+        rep = _rep("serve-fused-test", _DENSE, reqs=4)
+        s1 = rep.run(fused=fused).extras["serve"]
+        for g in range(2):
+            rep.submit(g, Request(
+                rid=900 + g, prompt=np.arange(1, 4, dtype=np.int32),
+                max_new_tokens=2))
+        s2 = rep.run(fused=fused).extras["serve"]
+        return s1, s2
+
+    s1f, s2f = drive(True)
+    assert s1f["fused"] is True and s2f["fused"] is True
+    _s1u, s2u = drive(False)
+    for k in ("max_queue_depth", "max_backlog"):
+        assert s2f[k] == s2u[k], (k, s2f[k], s2u[k])
+    # 8 queued requests in run 1 vs 2 in run 2: stale history would
+    # report run 1's peak again
+    assert s2f["max_queue_depth"] < s1f["max_queue_depth"]
+
+
+# ---------------------------------------------------------------------------
+# vectorized ownership forward-fill (replaces the O(T) column scans)
+# ---------------------------------------------------------------------------
+
+
+@fast
+def test_owner_fill_matches_reference_column_scan():
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        t_n = int(rng.integers(1, 12))
+        g_n = int(rng.integers(1, 3))
+        b = int(rng.integers(1, 4))
+        adm = np.where(rng.random((t_n, g_n, b)) < 0.3,
+                       rng.integers(0, 9, (t_n, g_n, b)),
+                       -1).astype(np.int32)
+        init = rng.integers(-1, 5, (g_n, b)).astype(np.int32)
+        got = fused_mod._owner_fill(adm, init)
+        want = np.empty_like(got)
+        for t in range(t_n):
+            for g in range(g_n):
+                for s in range(b):
+                    own = init[g, s]
+                    for u in range(t + 1):
+                        if adm[u, g, s] >= 0:
+                            own = adm[u, g, s]
+                    want[t, g, s] = own
+        np.testing.assert_array_equal(got, want)
+    z = fused_mod._owner_fill(np.zeros((0, 2, 2), np.int32),
+                              np.zeros((2, 2), np.int32))
+    assert z.shape == (0, 2, 2)
